@@ -1,0 +1,61 @@
+"""Paper Fig 18 — cumulative ablation at prompt length 320 (the paper's
+setting): naive-MXU (online-prepare) -> +activation-centric -> +order
+exchange -> +weight-centric -> +fast sync. Analytic arm on llama3-8b;
+the measured engine arms are covered by bench_dynamic / bench_sync.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.characteristics import (combine_dual, compile_time_model_us,
+                                        mxu_matmul_parts, mxu_matmul_time_us,
+                                        sync_cost_us, xla_matmul_parts)
+from repro.core.profiler import profile_analytic
+from repro.core.solver import PartitionSolver
+
+from .common import emit
+
+S = 320
+
+
+def main() -> None:
+    cfg = get_config("llama3-8b")
+    table = profile_analytic(cfg)
+    sites = {s: kn for s, kn in table.sites.items() if s != "head"}
+    L = cfg.n_layers
+
+    # (0) naive NPU: online graph generation per shape + misaligned exec
+    naive = sum(mxu_matmul_time_us(S, K, N) for K, N in sites.values()) * L \
+        + 4 * compile_time_model_us(S, cfg.d_model, cfg.d_ff)
+    emit("fig18_ablation/naive_mxu", naive, "1.00x")
+
+    # (1) + activation-centric: bucket 256 on MXU + 64 remainder on XLA
+    act = sum(combine_dual(mxu_matmul_parts(256, K, N),
+                           xla_matmul_parts(S - 256, K, N))
+              + sync_cost_us("fast")
+              for K, N in sites.values()) * L
+    emit("fig18_ablation/act_centric", act, f"{naive/act:.2f}x cumulative")
+
+    # (2) + order exchange: operand orientation chosen per NPU-2 by total
+    # single-path time (compute AND reload-traffic trade-off)
+    from repro.core.characteristics import combine_single
+    ord_ = sum(combine_dual(
+        min(mxu_matmul_parts(256, K, N), mxu_matmul_parts(N, K, 256),
+            key=lambda p: combine_single(p)),
+        xla_matmul_parts(S - 256, K, N)) + sync_cost_us("fast")
+        for K, N in sites.values()) * L
+    emit("fig18_ablation/order_exchange", ord_, f"{naive/ord_:.2f}x cumulative")
+
+    # (3) + weight-centric/hybrid: full solver
+    solver = PartitionSolver(table, sync_mode="fast")
+    het = sum(solver.solve_site(s, S).t_us for s in sites) * L
+    emit("fig18_ablation/weight_centric", het, f"{naive/het:.2f}x cumulative")
+
+    # (4) + fast sync vs host sync on the final config
+    solver_h = PartitionSolver(table, sync_mode="host")
+    het_h = sum(solver_h.solve_site(s, S).t_us for s in sites) * L
+    emit("fig18_ablation/fast_sync_final", het,
+         f"{het_h/het:.2f}x from sync alone")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Figs 1/3/4 — the three processor characteristics.
+
+Two layers of evidence per characteristic:
+  * analytic: the TPU-v5e cost model (deploy target) — the staircase /
+    order / linearity structure the solver exploits;
+  * measured: wall-clock of the two real executable paths on this backend
+    (XLA matmul vs the Pallas MXU-path kernel in interpret mode). CPU wall
+    times are NOT TPU times; what must (and does) reproduce is the SHAPE of
+    each curve, which is what the solver consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.characteristics import mxu_matmul_time_us, xla_matmul_time_us
+
+from .common import bench, emit
+
+
+def main() -> None:
+    # --- Fig 1: XLA-path linear performance (model)
+    for m in (64, 128, 256, 512, 1024, 2048, 4096):
+        t = xla_matmul_time_us(m, 2048, 2048)
+        emit(f"fig1_xla_linear/M={m}", t,
+             f"tflops={2*m*2048*2048/t/1e6:.2f}")
+
+    # --- Fig 3: MXU stage performance (model): staircase across a tile edge
+    for m in (96, 112, 120, 128, 136, 160, 192, 224, 256, 288):
+        t = mxu_matmul_time_us(m, 4096, 4096)
+        emit(f"fig3_mxu_stage/M={m}", t, f"tile={-(-m//128)}")
+
+    # --- Fig 4: order sensitivity at equal FLOPs (model)
+    for k in (32, 64, 128):
+        fwd = mxu_matmul_time_us(14336, 4096, k)
+        rev = mxu_matmul_time_us(k, 4096, 14336)
+        emit(f"fig4_order/K={k}_rowmajor", fwd, f"speedup={rev/fwd:.2f}x")
+        emit(f"fig4_order/K={k}_colmajor", rev, "")
+
+    # --- measured counterparts (structure check on this backend)
+    rng = jax.random.PRNGKey(0)
+    w = jax.random.normal(rng, (1024, 1024), jnp.float32)
+    xla_mm = jax.jit(lambda a, b: a @ b)
+    for m in (64, 128, 256, 512, 1024):
+        x = jax.random.normal(rng, (m, 1024), jnp.float32)
+        emit(f"fig1_xla_measured/M={m}", bench(xla_mm, x, w), "cpu-backend")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Fig 8 — 'NPU graph generation time' analogue: XLA trace+compile
+latency vs tensor shape. This is the cost Online-prepare pays per novel
+sequence length and the reason bucketed static shapes + ragged-remainder
+offload exist (activation-centric partitioning).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import emit
+
+
+def main() -> None:
+    for m in (64, 128, 256, 512, 1024):
+        def f(x, w):
+            for _ in range(4):           # a 4-matmul "operator graph"
+                x = jnp.tanh(x @ w)
+            return x
+        x = jax.ShapeDtypeStruct((m, 1024), jnp.float32)
+        w = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+        t0 = time.perf_counter()
+        jax.jit(f).lower(x, w).compile()
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"fig8_compile_cost/M={m}", dt, "per-novel-shape")
+
+
+if __name__ == "__main__":
+    main()

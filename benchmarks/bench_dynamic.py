@@ -1,0 +1,85 @@
+"""Paper Fig 14 — dynamic/misaligned sequence lengths: Online-prepare vs
+Padding vs NPU-pipe vs Hetero (activation-centric + hybrid).
+
+Analytic arm: per-op solver latencies + the compile-cost model for
+Online-prepare's per-shape graph generation. Measured arm: the real engine's
+four prefill strategies on the smoke model, including actual jit compile
+time paid by online-prepare.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.characteristics import compile_time_model_us
+from repro.core.engine import InferenceEngine
+from repro.core.profiler import STANDARD_BUCKETS, profile_analytic
+from repro.core.solver import PartitionSolver
+
+from .common import emit
+
+SEQS = (135, 300, 525, 1000)
+
+
+def analytic_arm(arch: str = "llama3-8b"):
+    cfg = get_config(arch)
+    table = profile_analytic(cfg)
+    solver = PartitionSolver(table, sync_mode="fast")
+    sites = [s for s in table.sites if s != "head"]
+    for S in SEQS:
+        bucket = next((b for b in STANDARD_BUCKETS if b >= S),
+                      STANDARD_BUCKETS[-1])
+        # online-prepare: exact-shape compute + per-shape graph build
+        t_exact = sum(table.lookup(s, S, "mxu") for s in sites) * cfg.n_layers
+        t_onlineprep = t_exact + 4 * compile_time_model_us(
+            S, cfg.d_model, cfg.d_ff)
+        # padding: everything on the aligned path at the padded bucket
+        t_pad = sum(table.lookup(s, bucket, "mxu")
+                    for s in sites) * cfg.n_layers
+        # pipe: sequential standard chunks (+ padded tail), aligned path only
+        t_pipe = 0.0
+        rem = S
+        for b in sorted(STANDARD_BUCKETS, reverse=True):
+            while rem >= b:
+                t_pipe += sum(table.lookup(s, b, "mxu") for s in sites)
+                rem -= b
+        if rem:
+            t_pipe += sum(table.lookup(s, min(STANDARD_BUCKETS), "mxu")
+                          for s in sites)
+        t_pipe *= cfg.n_layers
+        # hetero: solver-chosen act/hybrid partitioning at exact S
+        t_het = sum(solver.solve_site(s, S).t_us for s in sites) * cfg.n_layers
+        base = t_het
+        emit(f"fig14_dynamic/{arch}/S={S}/online-prepare", t_onlineprep,
+             f"vs_hetero={t_onlineprep/base:.2f}x")
+        emit(f"fig14_dynamic/{arch}/S={S}/padding", t_pad,
+             f"vs_hetero={t_pad/base:.2f}x")
+        emit(f"fig14_dynamic/{arch}/S={S}/pipe", t_pipe,
+             f"vs_hetero={t_pipe/base:.2f}x")
+        emit(f"fig14_dynamic/{arch}/S={S}/hetero", t_het, "1.00x")
+
+
+def measured_arm():
+    cfg = get_smoke_config("llama3-8b")
+    import time
+    for strat in ("online-prepare", "padding", "pipe", "hetero"):
+        eng = InferenceEngine(cfg, mode="xla", prefill_strategy=strat,
+                              buckets=(64, 128, 256), max_len=1400)
+        total = 0.0
+        for S in SEQS:
+            prompt = jax.random.randint(jax.random.PRNGKey(S), (1, S), 0,
+                                        cfg.vocab_size)
+            t0 = time.perf_counter()
+            eng.generate(prompt, max_new_tokens=1)
+            total += time.perf_counter() - t0
+        emit(f"fig14_dynamic_measured/{strat}", total * 1e6,
+             f"compiles={eng.stats.n_compiles},compile_s={eng.stats.compile_s:.2f}")
+
+
+def main() -> None:
+    analytic_arm()
+    measured_arm()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Fig 13 — prefill speed across engine modes and sequence lengths.
+
+Arms: xla-only (= MNN/MLC GPU-only), hetero-layer, hetero-tensor. Both the
+solver's analytic TPU-v5e latency (the deploy prediction the paper's tables
+correspond to) and measured CPU wall-clock of the real engine (mechanism
+check) are reported.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.engine import InferenceEngine
+from repro.core.profiler import profile_analytic
+from repro.core.solver import PartitionSolver
+
+from .common import emit
+
+SEQ_LENS = (64, 256, 1024)
+
+
+def analytic_arm(arch: str):
+    cfg = get_config(arch)
+    table = profile_analytic(cfg)
+    solver = PartitionSolver(table, sync_mode="fast")
+    for S in SEQ_LENS:
+        t_xla = sum(table.lookup(s, S, "xla") for s in table.sites
+                    if s != "head") * cfg.n_layers
+        t_mxu = sum(table.lookup(s, S, "mxu") for s in table.sites
+                    if s != "head") * cfg.n_layers
+        t_het = sum(solver.solve_site(s, S).t_us for s in table.sites
+                    if s != "head") * cfg.n_layers
+        emit(f"fig13_prefill_model/{arch}/S={S}/xla", t_xla,
+             f"tok_s={S/t_xla*1e6:.0f}")
+        emit(f"fig13_prefill_model/{arch}/S={S}/mxu", t_mxu,
+             f"tok_s={S/t_mxu*1e6:.0f}")
+        emit(f"fig13_prefill_model/{arch}/S={S}/hetero", t_het,
+             f"tok_s={S/t_het*1e6:.0f},speedup_vs_xla={t_xla/t_het:.2f}x")
+
+
+def measured_arm():
+    cfg = get_smoke_config("llama3-8b")
+    prompt = jax.random.randint(jax.random.PRNGKey(0), (1, 256), 0,
+                                cfg.vocab_size)
+    for mode in ("xla", "hetero-layer", "hetero-tensor"):
+        eng = InferenceEngine(cfg, mode=mode, max_len=512)
+        eng.generate(prompt, max_new_tokens=2)   # warm
+        eng.stats.prefill_s = eng.stats.prefill_tokens = 0
+        eng.generate(prompt, max_new_tokens=2)
+        tps = eng.stats.tokens_per_s()["prefill_tok_s"]
+        emit(f"fig13_prefill_measured/smoke/{mode}",
+             eng.stats.prefill_s * 1e6, f"tok_s={tps:.0f}")
+
+
+def main() -> None:
+    for arch in ("llama3-8b", "internlm-1.8b", "tinyllama-1.1b"):
+        analytic_arm(arch)
+    measured_arm()
+
+
+if __name__ == "__main__":
+    main()

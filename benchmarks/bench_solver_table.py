@@ -1,0 +1,38 @@
+"""Paper Table 3 — solver inputs/outputs on the paper's exact weight/
+activation shapes (Llama-family sites). Emits one row per (weight shape,
+activation M) with the chosen strategy + partition ratio.
+"""
+from __future__ import annotations
+
+from repro.core.characteristics import V5E
+from repro.core.profiler import LatencyTable
+from repro.core.solver import PartitionSolver
+
+from .common import emit
+
+PAPER_ROWS = [
+    # (K, N, M) — [weight shape], activation tokens (paper Table 3)
+    (4096, 4096, 1),
+    (4096, 28672, 1),           # fused up+gate
+    (14336, 4096, 1),           # FFN-down
+    (4096, 4096, 128),
+    (4096, 4096, 224),          # inside the 193-255 padding band
+    (4096, 4096, 256),
+    (4096, 4096, 264),          # 257-272: activation-centric band
+    (14336, 4096, 256),
+    (14336, 4096, 320),         # 257-384: hybrid band
+]
+
+
+def main() -> None:
+    table = LatencyTable(spec=V5E, mode="analytic")
+    table.sites = {f"w{K}x{N}": (K, N) for K, N, _ in PAPER_ROWS}
+    solver = PartitionSolver(table, sync_mode="fast")
+    for K, N, M in PAPER_ROWS:
+        d = solver.solve_site(f"w{K}x{N}", M)
+        emit(f"table3/[{K}x{N}]xM{M}", d.t_us,
+             f"{d.strategy}({d.ratio})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Shared benchmark utilities. Every benchmark prints CSV rows
+``name,us_per_call,derived`` so benchmarks.run can aggregate them."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def bench(fn, *args, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (on the current backend)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

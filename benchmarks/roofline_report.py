@@ -1,0 +1,24 @@
+"""§Roofline / §Dry-run report: reads the dry-run artifacts and emits one row
+per (arch x shape) with the three roofline terms + dominant bottleneck."""
+from __future__ import annotations
+
+from repro.roofline.analysis import analyze_all
+
+from .common import emit
+
+
+def main() -> None:
+    for c in analyze_all():
+        if c.skipped:
+            emit(f"roofline/{c.arch}/{c.shape}", 0.0, f"SKIP:{c.reason[:60]}")
+        elif not c.ok:
+            emit(f"roofline/{c.arch}/{c.shape}", 0.0, f"FAIL:{c.reason[:60]}")
+        else:
+            emit(f"roofline/{c.arch}/{c.shape}", c.bound_time_s * 1e6,
+                 f"dom={c.dominant},comp_ms={c.compute_s*1e3:.2f},"
+                 f"mem_ms={c.memory_s*1e3:.2f},coll_ms={c.collective_s*1e3:.2f},"
+                 f"useful={c.useful_ratio:.2f},roofline_frac={c.roofline_fraction:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark aggregator: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit)."""
+from __future__ import annotations
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_characteristics",   # Figs 1/3/4
+    "benchmarks.bench_bandwidth",         # Fig 5
+    "benchmarks.bench_compile_cost",      # Fig 8
+    "benchmarks.bench_solver_table",      # Table 3
+    "benchmarks.bench_prefill",           # Fig 13
+    "benchmarks.bench_dynamic",           # Fig 14
+    "benchmarks.bench_decode",            # Fig 15
+    "benchmarks.bench_sync",              # Figs 16/17
+    "benchmarks.bench_ablation",          # Fig 18
+    "benchmarks.bench_e2e",               # Fig 12 + Table 4
+    "benchmarks.roofline_report",         # §Roofline
+]
+
+
+def main() -> None:
+    failures = []
+    for name in MODULES:
+        print(f"# ---- {name} ----")
+        try:
+            importlib.import_module(name).main()
+        except Exception as e:  # noqa: BLE001 — report and continue the suite
+            failures.append((name, e))
+            print(f"# {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving driver: continuous batching over a shared KV cache with
+bucket-chunked (activation-centric) prefill admission.
+
+    PYTHONPATH=src python examples/serve_batch.py --requests 12
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.configs import get_smoke_config
+    from repro.serving.sampler import SamplerConfig
+    from repro.serving.scheduler import ContinuousBatcher, Request
+
+    cfg = get_smoke_config(args.arch)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(16, 200))
+                                        ).astype(np.int32),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+
+    cb = ContinuousBatcher(cfg, max_batch=args.max_batch, max_len=256,
+                           buckets=(32, 64, 128),
+                           sampler=SamplerConfig(temperature=0.8, top_k=40))
+    t0 = time.perf_counter()
+    cb.run(reqs)
+    dt = time.perf_counter() - t0
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.output) for r in reqs)
+    print(f"{done}/{len(reqs)} requests complete, {toks} tokens "
+          f"in {dt:.2f}s -> {toks/dt:.1f} tok/s aggregate "
+          f"(batch slots: {args.max_batch})")
+    for r in reqs[:3]:
+        print(f"  req{r.rid} prompt_len={len(r.prompt)} -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

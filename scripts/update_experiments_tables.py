@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Regenerate the §Roofline table addendum in EXPERIMENTS.md from the
+current artifacts/dryrun. Idempotent: replaces everything after the
+ADDENDUM marker."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.roofline.analysis import analyze_all, markdown_table  # noqa: E402
+
+MARKER = "<!-- ROOFLINE-ADDENDUM -->"
+
+
+def main():
+    cells = analyze_all()
+    ok = [c for c in cells if c.ok and not c.skipped]
+    table = markdown_table(cells)
+    n_dom = {}
+    for c in ok:
+        n_dom[c.dominant] = n_dom.get(c.dominant, 0) + 1
+    fits = sum(1 for c in ok if c.hbm_gb_per_chip <= 16.0)
+    addendum = f"""{MARKER}
+
+## §Roofline — final table (single-pod 16x16, post-§Perf code)
+
+{table}
+
+Summary: {len(ok)} runnable cells analyzed; dominant terms: {n_dom};
+{fits}/{len(ok)} cells fit 16GB/chip HBM per `memory_analysis`
+(the exceptions are recorded as open §Perf items). `useful ratio` near 1.0
+means compiled FLOPs ≈ analytic model FLOPs (no hidden recompute/dispatch
+waste); rows marked `scan-raw(undercounted)` lack probe pairs and
+undercount scan bodies. The best cells sit at 0.7-0.9 of the compute
+roofline (dbrx train post-fix, llama3/chameleon/qwen3 train); decode cells
+are memory/HBM-stream bound by nature — the split-KV path puts llama3
+decode at ~24% of its KV-stream bound on the raw metric (>=40%
+TPU-corrected, see §Perf).
+"""
+    p = Path("EXPERIMENTS.md")
+    text = p.read_text()
+    if MARKER in text:
+        text = text.split(MARKER)[0]
+    p.write_text(text.rstrip() + "\n\n" + addendum)
+    print(f"updated EXPERIMENTS.md with {len(cells)} rows ({len(ok)} analyzed)")
+
+
+if __name__ == "__main__":
+    main()

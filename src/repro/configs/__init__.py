@@ -1,0 +1,50 @@
+"""Architecture registry: ``get_config(arch)`` / ``get_smoke_config(arch)``.
+
+Assigned architectures (public-literature configs):
+  dbrx-132b qwen2-moe-a2.7b smollm-135m llama3-8b tinyllama-1.1b qwen3-1.7b
+  chameleon-34b zamba2-2.7b rwkv6-3b hubert-xlarge
+plus the paper's own evaluation models (llama-8b alias, internlm-1.8b proxy).
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig, MoEConfig, SSMConfig, RWKVConfig, ShapeSpec, SHAPES, cell_is_supported
+
+_ARCH_MODULES = {
+    "dbrx-132b": "dbrx_132b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "smollm-135m": "smollm_135m",
+    "llama3-8b": "llama3_8b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "chameleon-34b": "chameleon_34b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "rwkv6-3b": "rwkv6_3b",
+    "hubert-xlarge": "hubert_xlarge",
+    # paper's own models (for the paper-faithful benchmarks)
+    "internlm-1.8b": "internlm_1_8b",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+ASSIGNED_ARCHS = ARCHS[:10]
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "RWKVConfig", "ShapeSpec", "SHAPES",
+    "cell_is_supported", "get_config", "get_smoke_config", "ARCHS", "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,145 @@
+"""Hardware performance characteristics — the paper's §3, ported to TPU v5e.
+
+Two execution paths with qualitatively different cost models (the GPU/NPU
+split of the paper):
+
+  * MXU path  (≈ the paper's NPU): weight-stationary systolic model.
+    - stage performance (NPU-1): every dim rounds up to 128-lane tiles;
+      latency is a staircase in (M, N, K).
+    - order sensitivity (NPU-2): the stationary operand is the weight; when
+      the weight is large relative to the activation, tile-reload overhead
+      dominates: cost(x[M,K] @ w[K,N]) != cost(w^T[N,K] @ x^T[K,M]).
+    - shape sensitivity (NPU-3): weight reloads scale with ceil(K/128)*ceil(N/128),
+      amortized over M — row-heavy activations run proportionally faster.
+  * XLA path  (≈ the paper's GPU): flexible, any shape without recompiling,
+    linear-in-FLOPs with a lower effective peak plus a fixed kernel overhead
+    (GPU-1), and a large host-sync cost when the host blocks per kernel
+    (GPU-2 — clFinish:400us :: JAX dispatch+block_until_ready).
+  * Memory system (Memory-1): one engine's streams reach only a fraction of
+    peak HBM bandwidth; two concurrent engines aggregate closer to peak.
+
+All constants are per-chip TPU v5e unless noted and are the single source of
+truth for the profiler/solver AND the roofline math.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TPUSpec:
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12      # per chip
+    hbm_bw: float = 819e9                # B/s
+    ici_bw: float = 50e9                 # B/s per link
+    ici_links: int = 4                   # 2D torus (v5e)
+    vmem_bytes: int = 64 * 2 ** 20       # usable VMEM budget (conservative)
+    mxu_tile: int = 128                  # systolic array edge
+    n_mxu: int = 4
+    dispatch_us: float = 50.0            # host->device dispatch+sync latency
+    device_sync_us: float = 1.0          # on-device inter-step latency
+    # Memory-1: achievable HBM fraction by concurrent stream count
+    bw_frac_single: float = 0.62         # one engine (paper: 40-45/68 GB/s)
+    bw_frac_dual: float = 0.90           # two engines  (paper: ~60/68 GB/s)
+    # XLA-path effective compute efficiency on arbitrary shapes
+    xla_eff: float = 0.45
+    xla_kernel_overhead_us: float = 3.0
+
+    @property
+    def clock_hz(self) -> float:
+        # peak = 2 * tile^2 * n_mxu * clock
+        return self.peak_flops_bf16 / (2 * self.mxu_tile ** 2 * self.n_mxu)
+
+
+V5E = TPUSpec()
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def mxu_matmul_parts(M: int, K: int, N: int, spec: TPUSpec = V5E,
+                     *, bytes_per_el: int = 2) -> tuple[float, int]:
+    """(compute_us, hbm_bytes) for x[M,K] @ w[K,N] on the MXU path
+    (weight-stationary systolic model).
+
+    cycles = sum over (k,n) weight tiles of (reload + ceil(M/128) row-streams)
+    -> stage performance from the ceils, order/shape sensitivity from the
+    reload term scaling with K*N but amortizing over M.
+    """
+    t = spec.mxu_tile
+    tm, tk, tn = _ceil(M, t), _ceil(K, t), _ceil(N, t)
+    reload_cycles = t                       # systolic pipeline refill per tile
+    compute_cycles = tk * tn * (reload_cycles + tm * t) / spec.n_mxu
+    compute_us = compute_cycles / spec.clock_hz * 1e6
+    # memory: activations once, weights once (or more if > VMEM working set),
+    # outputs once
+    w_bytes = K * N * bytes_per_el
+    x_bytes = M * K * bytes_per_el
+    o_bytes = M * N * bytes_per_el
+    reload_factor = 1.0 if w_bytes + x_bytes < spec.vmem_bytes else \
+        max(1.0, tm / 8)                   # streaming reloads when oversized
+    nbytes = int(x_bytes + w_bytes * min(reload_factor, 4.0) + o_bytes)
+    return compute_us, nbytes
+
+
+def xla_matmul_parts(M: int, K: int, N: int, spec: TPUSpec = V5E,
+                     *, bytes_per_el: int = 2) -> tuple[float, int]:
+    """(compute_us incl. kernel overhead, hbm_bytes) for the flexible XLA
+    path: linear-in-FLOPs (GPU-1) at a lower effective peak, any shape."""
+    flops = 2.0 * M * K * N
+    nbytes = (M * K + K * N + M * N) * bytes_per_el
+    compute_us = flops / (spec.peak_flops_bf16 * spec.xla_eff) * 1e6 \
+        + spec.xla_kernel_overhead_us
+    return compute_us, int(nbytes)
+
+
+def combine_single(parts: tuple[float, int], spec: TPUSpec = V5E) -> float:
+    """Latency of one path running alone (single-stream bandwidth)."""
+    c, b = parts
+    return max(c, b / (spec.hbm_bw * spec.bw_frac_single) * 1e6)
+
+
+def combine_dual(parts_a: tuple[float, int], parts_b: tuple[float, int],
+                 spec: TPUSpec = V5E) -> float:
+    """Latency of two concurrent paths sharing the aggregated-bandwidth pool
+    (Memory-1: dual streams reach bw_frac_dual of peak)."""
+    ca, ba = parts_a
+    cb, bb = parts_b
+    mem_us = (ba + bb) / (spec.hbm_bw * spec.bw_frac_dual) * 1e6
+    return max(ca, cb, mem_us)
+
+
+def mxu_matmul_time_us(M: int, K: int, N: int, spec: TPUSpec = V5E,
+                       *, bytes_per_el: int = 2) -> float:
+    return combine_single(mxu_matmul_parts(M, K, N, spec,
+                                           bytes_per_el=bytes_per_el), spec)
+
+
+def xla_matmul_time_us(M: int, K: int, N: int, spec: TPUSpec = V5E,
+                       *, bytes_per_el: int = 2) -> float:
+    return combine_single(xla_matmul_parts(M, K, N, spec,
+                                           bytes_per_el=bytes_per_el), spec)
+
+
+def dual_path_memory_time_us(bytes_a: int, bytes_b: int,
+                             spec: TPUSpec = V5E) -> float:
+    """Memory-1: two concurrent streams share an aggregated-bandwidth pool."""
+    return (bytes_a + bytes_b) / (spec.hbm_bw * spec.bw_frac_dual) * 1e6
+
+
+def sync_cost_us(mode: str, spec: TPUSpec = V5E) -> float:
+    """GPU-2: 'host' = blocking host sync per kernel (clFinish analogue);
+    'fast' = on-device chaining (the paper's flag-polling analogue)."""
+    return spec.dispatch_us if mode == "host" else spec.device_sync_us
+
+
+def compile_time_model_us(M: int, K: int, N: int) -> float:
+    """'NPU graph generation' analogue (paper Fig 8): per-graph build latency,
+    affine in sequence length. Calibrated to the paper's own measurements
+    (~100ms/graph at S=135, ~500ms/graph at S=1000). NOTE: measured XLA
+    trace+compile on this backend (benchmarks/bench_compile_cost.py) is ~10x
+    LARGER — online-prepare is even less viable on the TPU target than on
+    QNN, strengthening the case for bucketed static graphs (EXPERIMENTS.md)."""
+    return 5e4 + 350.0 * M

@@ -1,0 +1,185 @@
+"""HeteroInfer inference engine (paper §4.4 "Inference Engine", Fig 11).
+
+Offline: profiler -> solver -> PartitionPlan (graphs "generated in advance").
+Online: per request, pick the prefill strategy for the ACTUAL sequence length
+and run decode with fast synchronization.
+
+Engine modes (the paper's eval arms):
+  'xla'            — flexible-path only            (= MNN/MLC GPU-only)
+  'mxu'            — aligned-path only, pad to buckets (= llm.npu/PI-2 NPU-only)
+  'hetero-layer'   — per-op affinity (§4.1)
+  'hetero-tensor'  — solver-driven tensor partitioning (§4.2)
+
+Prefill strategies for dynamic lengths (paper §5.3.2 / Fig 14):
+  'online-prepare' — (re)trace+compile at the exact length each time
+  'padding'        — pad every matmul's token dim to the next bucket
+  'pipe'           — sequential standard-bucket chunked prefill (NPU-pipe)
+  'hetero'         — standard-bucket chunks + ragged remainder chunk
+                     (multi-tensor activation partitioning, Fig 9)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+
+from .partition import HeteroCtx
+from .profiler import LatencyTable, STANDARD_BUCKETS, profile_analytic
+from .solver import PartitionSolver, PartitionPlan
+from .sync import generate_host_loop, generate_on_device
+
+
+@dataclass
+class EngineStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    compile_s: float = 0.0
+    n_compiles: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+    def tokens_per_s(self) -> dict:
+        return {
+            "prefill_tok_s": self.prefill_tokens / self.prefill_s
+            if self.prefill_s else 0.0,
+            "decode_tok_s": self.decode_tokens / self.decode_s
+            if self.decode_s else 0.0,
+        }
+
+
+class InferenceEngine:
+    def __init__(self, cfg, params=None, *, mode: str = "hetero-tensor",
+                 prefill_strategy: str = "hetero", fast_sync: bool = True,
+                 table: Optional[LatencyTable] = None,
+                 plan: Optional[PartitionPlan] = None,
+                 buckets: tuple = STANDARD_BUCKETS,
+                 max_len: int = 2048, interpret: bool = True,
+                 use_kernels: bool = True, rng=None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            rng if rng is not None else jax.random.PRNGKey(0))
+        self.mode = mode
+        self.prefill_strategy = prefill_strategy
+        self.fast_sync = fast_sync
+        self.buckets = tuple(sorted(buckets))
+        self.max_len = max_len
+        self.table = table or profile_analytic(cfg)
+        self.plan = plan or PartitionSolver(
+            self.table, sync_mode="fast" if fast_sync else "host").solve(cfg)
+        # use_kernels: route MXU-path matmuls through the Pallas kernel
+        # (interpret mode on CPU — functional; CPU wall-times of the MXU
+        # path are NOT representative of silicon, the analytic arms are).
+        self.ctx = HeteroCtx(mode=mode, plan=self.plan,
+                             interpret=interpret) if use_kernels else None
+        self.stats = EngineStats()
+        self._prefill_cache: dict = {}
+
+    # ------------------------------------------------------------- helpers --
+    def _jit_prefill(self, chunk_len: int):
+        """One compiled graph per chunk length ('graphs generated in
+        advance'); a NEW length costs a trace+compile — the cost
+        Online-prepare pays per request and bucketing amortizes."""
+        key = ("prefill", chunk_len)
+        new = key not in self._prefill_cache
+        if new:
+            self._prefill_cache[key] = jax.jit(
+                partial(self.model.prefill, hetero_ctx=self.ctx),
+                donate_argnums=(2,))
+            self.stats.n_compiles += 1
+        return self._prefill_cache[key], new
+
+    def _bucket_chunks(self, S: int) -> list[tuple[int, int]]:
+        """Split S into (chunk_graph_size, true_tokens) pieces."""
+        if self.prefill_strategy in ("online-prepare", "padding"):
+            return [(S, S)]     # padding happens inside matmuls (PAD decisions)
+        if self.prefill_strategy == "pipe":
+            # NPU-pipe: standard-size chunks over the first S-1 tokens (the
+            # tail padded to the smallest bucket), then an EXACT 1-token
+            # chunk so last-token logits come from the true final position.
+            chunks, rem = [], S - 1
+            for b in sorted(self.buckets, reverse=True):
+                while rem >= b:
+                    chunks.append((b, b))
+                    rem -= b
+            if rem:
+                chunks.append((min(self.buckets), rem))       # padded tail
+            chunks.append((1, 1))
+            return chunks
+        chunks, rem = [], S
+        for b in sorted(self.buckets, reverse=True):
+            while rem >= b:
+                chunks.append((b, b))
+                rem -= b
+        if rem:
+            chunks.append((rem, rem))   # hetero: ragged remainder (XLA path)
+        return chunks
+
+    # -------------------------------------------------------------- public --
+    def generate(self, prompt: jax.Array, max_new_tokens: int = 32,
+                 greedy: bool = True) -> jax.Array:
+        """prompt: [B, S] int32. Returns [B, max_new_tokens]."""
+        B, S = prompt.shape
+        # pipe's padded tail may write up to min(buckets)-1 slots past S;
+        # without headroom the dynamic_update_slice would CLAMP and corrupt
+        # earlier cache slots.
+        pad_headroom = (min(self.buckets) if self.prefill_strategy == "pipe"
+                        else 0)
+        total = S + max_new_tokens + pad_headroom
+        cache = self.model.init_cache(
+            batch=B, max_len=total,
+            dtype=jnp.dtype(self.cfg.compute_dtype))
+
+        t0 = time.perf_counter()
+        chunks = self._bucket_chunks(S)
+        idx = 0
+        logits = None
+        for c, take in chunks:
+            piece = prompt[:, idx: idx + take]
+            if take < c:                # pipe-mode padded tail
+                piece = jnp.pad(piece, ((0, 0), (0, c - take)))
+            fn, new = self._jit_prefill(c)
+            tc = time.perf_counter()
+            logits, cache = fn(self.params, piece, cache, start_index=idx)
+            if new:                     # first call pays trace+compile
+                jax.block_until_ready(logits)
+                self.stats.compile_s += time.perf_counter() - tc
+            idx += take
+        cache = {**cache, "index": jnp.asarray(S, jnp.int32)}
+        jax.block_until_ready(logits)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_tokens += B * S
+
+        first = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+        t0 = time.perf_counter()
+        n_more = max_new_tokens - 1
+        if n_more > 0:
+            gen = generate_on_device if self.fast_sync else generate_host_loop
+            toks, cache = gen(self.model, self.params, first, cache, n_more)
+            out = jnp.concatenate([first, toks], axis=1)
+        else:
+            out = first
+        jax.block_until_ready(out)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_tokens += B * max_new_tokens
+        return out
+
+    # --------------------------------------------------- analytic latencies --
+    def predicted_prefill_us(self, S: int) -> float:
+        """Solver-predicted prefill matmul latency for length S (per layer
+        set), used by the paper-faithful latency benchmarks."""
+        total = 0.0
+        for site in self.table.sites:
+            if site == "head":
+                continue
+            dec = PartitionSolver(self.table,
+                                  sync_mode="fast" if self.fast_sync else "host"
+                                  ).solve_site(site, max(S, 1))
+            total += dec.t_us
+        return total * self.cfg.n_layers

@@ -1,0 +1,136 @@
+"""Partition execution: the HeteroCtx that models thread through every matmul.
+
+``HeteroCtx.matmul(x, w, name=site)`` consults the PartitionPlan (or the
+engine mode) and executes the chosen strategy:
+
+  xla_only  : one flexible-path matmul
+  mxu_only  : aligned Pallas MXU-path matmul (pad M/K/N to 128 = the NPU's
+              internal stage padding); order-exchange applied when profitable
+              (NPU-2: y = x@w  ->  y = (w^T @ x^T)^T when x is the smaller,
+              better-stationary operand)
+  pad       : mxu_only with M padded up to the decision's bucket
+  weight    : weight-centric split — MXU path computes the 128-aligned major
+              column block, XLA path the remainder columns; the two matmuls
+              are data-independent so XLA schedules them concurrently (the
+              GPU||NPU analogue)
+  act       : activation-centric split — first ``m_bucket`` tokens on the MXU
+              path, ragged tail on the XLA path
+  hybrid    : act bucketing + weight split of the bucketed part
+
+Everything happens at trace time (static shapes), so a jitted program bakes
+in the plan — the paper's 'graphs generated in advance by the solver'.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hetero_matmul.ops import mxu_matmul
+
+from .characteristics import V5E, mxu_matmul_time_us
+from .solver import Decision, PartitionPlan
+
+ALIGN = 128
+
+
+def _pad_to(x, mult, axis):
+    r = x.shape[axis] % mult
+    if r == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - r)
+    return jnp.pad(x, pads)
+
+
+@dataclass
+class HeteroCtx:
+    """mode: 'xla' | 'mxu' | 'hetero-layer' | 'hetero-tensor'."""
+    mode: str = "hetero-tensor"
+    plan: Optional[PartitionPlan] = None
+    interpret: bool = True
+    order_exchange: bool = True
+    layer_mxu_threshold: int = 128       # hetero-layer: M >= this -> MXU path
+    stationary: str = "output"
+
+    # ---------------------------------------------------------- primitives --
+    def _mxu(self, x2, w):
+        """Aligned MXU-path matmul with internal stage padding + NPU-2
+        order-exchange."""
+        M, K = x2.shape
+        N = w.shape[1]
+        use_exchange = (self.order_exchange and
+                        mxu_matmul_time_us(N, K, M) < mxu_matmul_time_us(M, K, N))
+        xp = _pad_to(_pad_to(x2, ALIGN, 0), ALIGN, 1)
+        wp = _pad_to(_pad_to(w.astype(x2.dtype), ALIGN, 0), ALIGN, 1)
+        if use_exchange:
+            y = mxu_matmul(wp.T, xp.T, interpret=self.interpret,
+                           stationary=self.stationary).T
+        else:
+            y = mxu_matmul(xp, wp, interpret=self.interpret,
+                           stationary=self.stationary)
+        return y[:M, :N]
+
+    def _xla(self, x2, w):
+        return x2 @ w.astype(x2.dtype)
+
+    # ------------------------------------------------------------ dispatch --
+    def matmul(self, x, w, name: Optional[str] = None):
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        M, N = x2.shape[0], w.shape[1]
+
+        if self.mode == "xla":
+            y = self._xla(x2, w)
+        elif self.mode == "mxu":
+            y = self._mxu(x2, w)
+        elif self.mode == "hetero-layer":
+            y = self._mxu(x2, w) if M >= self.layer_mxu_threshold else \
+                self._xla(x2, w)
+        else:
+            y = self._tensor_level(x2, w, name, M, N)
+        return y.reshape(*lead, N)
+
+    def _tensor_level(self, x2, w, name, M, N):
+        dec = None
+        if self.plan is not None and name is not None:
+            dec = self.plan.decision(name, M)
+            if dec is None:       # nearest-M fallback (solver probes a grid)
+                ms = sorted({m for (s, m) in self.plan.decisions if s == name})
+                if ms:
+                    nearest = min(ms, key=lambda m: abs(m - M))
+                    dec = self.plan.decision(name, nearest)
+        if dec is None:
+            return self._mxu(x2, w) if M >= ALIGN else self._xla(x2, w)
+        return self.execute(dec, x2, w)
+
+    def execute(self, dec: Decision, x2, w):
+        M, N = x2.shape[0], w.shape[1]
+        s = dec.strategy
+        if s == "xla_only":
+            return self._xla(x2, w)
+        if s in ("mxu_only", "pad"):
+            return self._mxu(x2, w)     # _mxu pads M internally (stage padding)
+        if s == "weight":
+            n = min(dec.n_split, N - 1)
+            y1 = self._mxu(x2, w[:, :n])
+            y2 = self._xla(x2, w[:, n:])
+            return jnp.concatenate([y1, y2], axis=-1)
+        if s == "act":
+            b = min(dec.m_bucket, M - 1) if dec.m_bucket < M else M - ALIGN
+            b = max(b, 1)
+            y1 = self._mxu(x2[:b], w)
+            y2 = self._xla(x2[b:], w)
+            return jnp.concatenate([y1, y2], axis=0)
+        if s == "hybrid":
+            b = min(dec.m_bucket, M - 1)
+            b = max(b, 1)
+            n = min(dec.n_split, N - 1)
+            y1a = self._mxu(x2[:b], w[:, :n])
+            y1b = self._xla(x2[:b], w[:, n:])
+            y2 = self._xla(x2[b:], w)
+            return jnp.concatenate(
+                [jnp.concatenate([y1a, y1b], axis=-1), y2], axis=0)
+        raise ValueError(f"unknown strategy {s}")

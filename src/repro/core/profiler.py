@@ -1,0 +1,173 @@
+"""Performance profiler (paper §4.4, "Performance Profiler").
+
+Builds a LatencyTable: (site weight shape [K,N]) x (token count M) x (path)
+-> latency us. Two modes:
+
+  * ``analytic``  — evaluates the TPU characteristics models (the deploy-time
+    default here: the container has no TPU, and the models encode the
+    measured v5e behavior the kernels are built around).
+  * ``measured``  — wall-clock microbenchmarks of the two real paths (XLA jnp
+    matmul vs the Pallas MXU-path kernel) on the current backend. Used by the
+    CPU benchmarks to demonstrate the *mechanism* end-to-end.
+
+The profiling space is constrained exactly as in the paper: only the LLM's
+weight shapes; token counts restricted to the standard bucket grid + probes
+below/above each bucket edge. A full table profiles in seconds (paper: <20min
+on-device).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable
+
+import numpy as np
+
+from .characteristics import TPUSpec, V5E, mxu_matmul_time_us, xla_matmul_time_us
+
+STANDARD_BUCKETS = (128, 256, 512, 1024, 2048, 4096)
+PROBE_MS = (1, 8, 32, 64, 96, 128, 192, 256, 320, 384, 512, 768, 1024,
+            1536, 2048, 3072, 4096)
+
+
+def model_weight_shapes(cfg) -> dict[str, tuple[int, int]]:
+    """Site name -> (K, N) for every partitionable matmul in the model."""
+    d, hd = cfg.d_model, cfg.head_dim
+    sites = {
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, d),
+        "head": (d, cfg.vocab_size),
+    }
+    if cfg.moe:
+        sites.update({
+            "w_gate": (d, cfg.moe.d_ff_expert),
+            "w_up": (d, cfg.moe.d_ff_expert),
+            "w_down": (cfg.moe.d_ff_expert, d),
+        })
+        if cfg.moe.d_ff_shared:
+            sites.update({
+                "shared/w_gate": (d, cfg.moe.d_ff_shared),
+                "shared/w_up": (d, cfg.moe.d_ff_shared),
+                "shared/w_down": (cfg.moe.d_ff_shared, d),
+            })
+    else:
+        sites.update({
+            "w_gate": (d, cfg.d_ff),
+            "w_up": (d, cfg.d_ff),
+            "w_down": (cfg.d_ff, d),
+        })
+    if cfg.ssm is not None:
+        d_in = cfg.ssm.expand * d
+        nh = d_in // cfg.ssm.head_dim
+        sites["in_proj"] = (d, 2 * d_in + 2 * cfg.ssm.d_state + nh)
+        sites["out_proj"] = (d_in, d)
+    if cfg.rwkv is not None:
+        sites = {"wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d),
+                 "wo": (d, d), "wk_ffn": (d, cfg.d_ff), "wv_ffn": (cfg.d_ff, d),
+                 "wr_ffn": (d, d), "head": (d, cfg.vocab_size)}
+    return sites
+
+
+@dataclass
+class LatencyTable:
+    """entries[(site, M, path)] = microseconds. path in {'mxu','xla'}."""
+    spec: TPUSpec = V5E
+    entries: dict = field(default_factory=dict)
+    sites: dict = field(default_factory=dict)
+    mode: str = "analytic"
+
+    def lookup(self, site: str, M: int, path: str) -> float:
+        key = (site, M, path)
+        if key in self.entries:
+            return self.entries[key]
+        return self.interpolate(site, M, path)
+
+    def interpolate(self, site: str, M: int, path: str) -> float:
+        """GPU-1 linear / NPU-1 stage interpolation for unseen M (paper §4.4:
+        'the solver estimates operator latency for variable-length sequences
+        by leveraging GPU-1 and NPU-1')."""
+        ms = sorted({m for (s, m, p) in self.entries if s == site and p == path})
+        if not ms:
+            K, N = self.sites[site]
+            f = mxu_matmul_time_us if path == "mxu" else xla_matmul_time_us
+            return f(M, K, N, self.spec)
+        if path == "mxu":
+            # stage model: latency of the next bucketed M (staircase)
+            m_up = next((m for m in ms if m >= M), ms[-1])
+            scale = 1.0 if m_up >= M else M / ms[-1]
+            return self.entries[(site, m_up, path)] * max(scale, 1.0)
+        # linear model through the two nearest points
+        lo = max((m for m in ms if m <= M), default=ms[0])
+        hi = next((m for m in ms if m >= M), ms[-1])
+        tlo, thi = self.entries[(site, lo, path)], self.entries[(site, hi, path)]
+        if hi == lo:
+            return tlo * M / lo
+        w = (M - lo) / (hi - lo)
+        return tlo + w * (thi - tlo)
+
+    def save(self, path: str | Path):
+        data = {"mode": self.mode, "spec": self.spec.name,
+                "sites": {k: list(v) for k, v in self.sites.items()},
+                "entries": [[s, m, p, t] for (s, m, p), t in self.entries.items()]}
+        Path(path).write_text(json.dumps(data))
+
+    @classmethod
+    def load(cls, path: str | Path, spec: TPUSpec = V5E) -> "LatencyTable":
+        data = json.loads(Path(path).read_text())
+        t = cls(spec=spec, mode=data["mode"])
+        t.sites = {k: tuple(v) for k, v in data["sites"].items()}
+        for s, m, p, v in data["entries"]:
+            t.entries[(s, int(m), p)] = float(v)
+        return t
+
+
+def profile_analytic(cfg, spec: TPUSpec = V5E,
+                     Ms: Iterable[int] = PROBE_MS) -> LatencyTable:
+    table = LatencyTable(spec=spec, mode="analytic")
+    table.sites = model_weight_shapes(cfg)
+    for site, (K, N) in table.sites.items():
+        for M in Ms:
+            table.entries[(site, M, "mxu")] = mxu_matmul_time_us(M, K, N, spec)
+            table.entries[(site, M, "xla")] = xla_matmul_time_us(M, K, N, spec)
+    return table
+
+
+def profile_measured(cfg, Ms: Iterable[int] = (1, 32, 128, 256, 512),
+                     *, repeats: int = 3, max_kn: int = 4096) -> LatencyTable:
+    """Wall-clock the two real paths on the current backend (CPU here).
+    Weight dims are capped so CPU profiling stays fast; relative path behavior
+    (staircase vs linear) is what the benchmarks demonstrate."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.hetero_matmul.ops import mxu_matmul
+
+    table = LatencyTable(mode="measured")
+    table.sites = {s: (min(k, max_kn), min(n, max_kn))
+                   for s, (k, n) in model_weight_shapes(cfg).items()}
+    rng = jax.random.PRNGKey(0)
+
+    def bench(fn, *args):
+        fn(*args).block_until_ready()
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(*args).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e6)
+
+    xla_mm = jax.jit(lambda a, b: a @ b)
+    for site, (K, N) in table.sites.items():
+        w = jax.random.normal(rng, (K, N), jnp.float32)
+        for M in Ms:
+            x = jax.random.normal(rng, (M, K), jnp.float32)
+            table.entries[(site, M, "xla")] = bench(xla_mm, x, w)
+            Mp = -(-M // 128) * 128      # MXU path needs aligned static shape
+            xp = jax.random.normal(rng, (Mp, K), jnp.float32)
+            if K % 128 == 0 and N % 128 == 0:
+                table.entries[(site, M, "mxu")] = bench(
+                    lambda a, b: mxu_matmul(a, b), xp, w)
+    return table

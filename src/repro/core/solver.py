@@ -1,0 +1,185 @@
+"""Tensor partitioning solver (paper §4.4).
+
+For every matmul site and token count M, enumerate the feasible strategies
+and minimize
+
+    T_total = min( max(T_xla^p1, T_mxu^p2) + T_sync + T_copy,
+                   T_xla^all,
+                   T_mxu^all + T_sync + T_copy )        s.t. p1 + p2 = all
+
+Strategies (paper §4.2):
+  * XLA_ONLY / MXU_ONLY        — no partition (Table 3 rows 3/4)
+  * WEIGHT   — weight-centric: split N at a 128-aligned ratio; both paths run
+               the full token set on complementary output columns (Fig 7)
+  * ACT      — activation-centric: tokens split into the largest standard
+               bucket on the MXU path + dynamic remainder on the XLA path
+               (Fig 9) — this is also how dynamic shapes avoid recompiles
+  * HYBRID   — ACT bucketing on tokens + WEIGHT split of the bucketed part
+  * PAD      — pad M up to the next bucket, MXU only (the Padding baseline)
+
+The solver additionally picks the distributed KV layout for decode
+("kv head-parallel" vs "kv sequence-parallel" split-KV) from the collective
+model — the mesh-level expression of the same partitioning decision.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, asdict, field
+from pathlib import Path
+from typing import Optional
+
+from .characteristics import (TPUSpec, V5E, combine_dual, mxu_matmul_parts,
+                              sync_cost_us, xla_matmul_parts)
+from .profiler import LatencyTable, STANDARD_BUCKETS, model_weight_shapes
+
+
+ALIGN = 128
+
+
+@dataclass(frozen=True)
+class Decision:
+    site: str
+    M: int
+    strategy: str                  # xla_only | mxu_only | weight | act | hybrid | pad
+    t_us: float
+    # weight-centric: n_mxu columns on the MXU path (128-aligned), rest XLA
+    n_split: int = 0
+    # activation-centric: tokens on the MXU path (a standard bucket), rest XLA
+    m_bucket: int = 0
+    ratio: str = ""                # human-readable "mxu:xla" work ratio
+
+    def describe(self) -> str:
+        return (f"{self.site}[M={self.M}] -> {self.strategy} "
+                f"(n_split={self.n_split}, m_bucket={self.m_bucket}, "
+                f"{self.ratio}) {self.t_us:.1f}us")
+
+
+@dataclass
+class PartitionPlan:
+    arch: str
+    sync_mode: str
+    decisions: dict = field(default_factory=dict)   # (site, M) -> Decision
+    kv_mode: Optional[str] = None
+
+    def decision(self, site: str, M: int) -> Optional[Decision]:
+        return self.decisions.get((site, M))
+
+    def save(self, path):
+        Path(path).write_text(json.dumps({
+            "arch": self.arch, "sync_mode": self.sync_mode,
+            "kv_mode": self.kv_mode,
+            "decisions": [asdict(d) for d in self.decisions.values()]}))
+
+    @classmethod
+    def load(cls, path) -> "PartitionPlan":
+        data = json.loads(Path(path).read_text())
+        plan = cls(arch=data["arch"], sync_mode=data["sync_mode"],
+                   kv_mode=data.get("kv_mode"))
+        for d in data["decisions"]:
+            dec = Decision(**d)
+            plan.decisions[(dec.site, dec.M)] = dec
+        return plan
+
+
+class PartitionSolver:
+    def __init__(self, table: LatencyTable, spec: TPUSpec = V5E,
+                 *, sync_mode: str = "fast"):
+        self.table = table
+        self.spec = spec
+        self.sync_mode = sync_mode
+
+    # ---- per-site-and-M strategy search ------------------------------------
+    def solve_site(self, site: str, M: int) -> Decision:
+        K, N = self.table.sites[site]
+        t_sync = sync_cost_us(self.sync_mode, self.spec)
+        t_copy = 0.0            # UMA analogue: both paths share HBM buffers
+        lut = self.table.lookup
+
+        cands: list[Decision] = []
+        aligned_m = M % ALIGN == 0
+
+        # no-partition candidates
+        cands.append(Decision(site, M, "xla_only", lut(site, M, "xla"),
+                              ratio="0:1"))
+        if aligned_m:
+            cands.append(Decision(site, M, "mxu_only",
+                                  lut(site, M, "mxu") + t_sync, ratio="1:0"))
+        else:
+            m_pad = -(-M // ALIGN) * ALIGN
+            cands.append(Decision(site, M, "pad",
+                                  lut(site, m_pad, "mxu") + t_sync,
+                                  m_bucket=m_pad, ratio="1:0(pad)"))
+
+        # weight-centric: N split at a 128-aligned point (Fig 7). Both paths
+        # run CONCURRENTLY -> memory time uses the dual-stream pool (Memory-1)
+        if N >= 2 * ALIGN:
+            Mq = M if aligned_m else -(-M // ALIGN) * ALIGN  # stage padding
+            for frac in (i / 8 for i in range(1, 8)):
+                n_mxu = int(round(N * frac / ALIGN)) * ALIGN
+                if not 0 < n_mxu < N:
+                    continue
+                t = combine_dual(mxu_matmul_parts(Mq, K, n_mxu, self.spec),
+                                 xla_matmul_parts(M, K, N - n_mxu, self.spec),
+                                 self.spec) + t_sync
+                cands.append(Decision(site, M, "weight", t, n_split=n_mxu,
+                                      ratio=f"{n_mxu}:{N - n_mxu}"))
+
+        # activation-centric: bucket + remainder (Fig 9), concurrent paths
+        buckets = [b for b in STANDARD_BUCKETS if b < M]
+        for b in buckets:
+            rem = M - b
+            t = combine_dual(mxu_matmul_parts(b, K, N, self.spec),
+                             xla_matmul_parts(rem, K, N, self.spec),
+                             self.spec) + t_sync
+            cands.append(Decision(site, M, "act", t, m_bucket=b,
+                                  ratio=f"{b}:{rem}tok"))
+            # hybrid: also weight-split the bucketed part (§4.2.3)
+            if N >= 2 * ALIGN and rem < b // 2:
+                for frac in (0.25, 0.5, 0.75):
+                    n_mxu = int(round(N * frac / ALIGN)) * ALIGN
+                    if not 0 < n_mxu < N:
+                        continue
+                    cm, bm = mxu_matmul_parts(b, K, n_mxu, self.spec)
+                    cx1, bx1 = xla_matmul_parts(b, K, N - n_mxu, self.spec)
+                    cx2, bx2 = xla_matmul_parts(rem, K, N, self.spec)
+                    t = combine_dual((cm, bm), (cx1 + cx2, bx1 + bx2),
+                                     self.spec) + t_sync
+                    cands.append(Decision(site, M, "hybrid", t,
+                                          n_split=n_mxu, m_bucket=b,
+                                          ratio=f"{n_mxu}:{N - n_mxu}w"))
+        best = min(cands, key=lambda d: d.t_us)
+        return best
+
+    # ---- whole-model plan ---------------------------------------------------
+    def solve(self, cfg, Ms=(1, 64, 128, 192, 256, 300, 320, 512, 1024,
+                             2048, 4096)) -> PartitionPlan:
+        plan = PartitionPlan(arch=cfg.name, sync_mode=self.sync_mode)
+        for site in self.table.sites:
+            for M in Ms:
+                plan.decisions[(site, M)] = self.solve_site(site, M)
+        plan.kv_mode = self.solve_kv_mode(cfg)
+        return plan
+
+    # ---- distributed decode layout (mesh-level partitioning) ---------------
+    def solve_kv_mode(self, cfg, *, model_ax: int = 16,
+                      seq_len: int = 32768, batch_per_dev: int = 8) -> str:
+        """Pick KV sharding for decode: heads over the model axis (no
+        collective in attention, but padded/replicated KV when n_kv_heads <
+        axis) vs sequence-split KV (balanced HBM streams + tiny two-pass
+        softmax all-reduce). Bytes-dominated decision — decode is Memory-1."""
+        if cfg.rwkv is not None:
+            return "head"        # constant-size state; no KV to split
+        hd, hkv = cfg.head_dim, cfg.n_kv_heads
+        bytes_el = 2
+        kv_bytes_tot = 2 * seq_len * hkv * hd * bytes_el * batch_per_dev
+        # Each chip streams its own HBM in both modes; the decision is
+        # replication waste (head mode when heads don't divide the axis)
+        # vs the tiny split-KV softmax-combine collective (seq mode).
+        eff = math.gcd(hkv, model_ax)
+        bw = self.spec.hbm_bw * self.spec.bw_frac_single
+        t_head = (kv_bytes_tot / eff) / bw
+        t_seq = (kv_bytes_tot / model_ax) / bw
+        coll = 2 * cfg.n_heads * hd * bytes_el * batch_per_dev  # num+den combine
+        t_seq += coll / (self.spec.ici_bw * self.spec.ici_links)
+        return "head" if t_head <= t_seq else "seq"

@@ -1,0 +1,265 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP, driven by param-path pattern match.
+
+Conventions (single- or multi-pod; D = compound data axes, M = ("model",)):
+  * weights: TP dim over M, FSDP dim over D  (ZeRO-3-style: optimizer states
+    shard identically; scan-over-layers turns the per-layer FSDP all-gather
+    into an overlapped weight prefetch).
+  * activations between blocks: batch over D, sequence over M (Megatron-style
+    sequence parallelism) — applied via ``hidden_constraint`` inside models.
+  * MoE experts over M (EP); router replicated.
+  * KV caches: batch over D; heads over M ("head" mode) or sequence over M
+    ("seq" mode = distributed split-KV flash-decoding). The HeteroInfer solver
+    picks the mode per (arch, shape); see repro.core.solver.
+"""
+from __future__ import annotations
+
+import contextvars
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+# -------------------------------------------------- activation constraints --
+
+_ACT_SPEC: contextvars.ContextVar = contextvars.ContextVar("act_spec", default=None)
+
+
+class activation_sharding:
+    """Context manager installing the between-blocks hidden-state spec."""
+
+    def __init__(self, spec: Optional[P]):
+        self.spec = spec
+
+    def __enter__(self):
+        self.tok = _ACT_SPEC.set(self.spec)
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_SPEC.reset(self.tok)
+        return False
+
+
+def hidden_constraint(x: jax.Array) -> jax.Array:
+    spec = _ACT_SPEC.get()
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+_SPLIT_KV: contextvars.ContextVar = contextvars.ContextVar("split_kv",
+                                                           default=False)
+
+
+class split_kv_enabled:
+    """Trace-time switch: decode attention uses the shard_map split-KV path
+    (sequence-sharded cache, owner-local writes, psum softmax combine)."""
+
+    def __init__(self, enable: bool):
+        self.enable = enable
+
+    def __enter__(self):
+        self.tok = _SPLIT_KV.set(self.enable)
+        return self
+
+    def __exit__(self, *exc):
+        _SPLIT_KV.reset(self.tok)
+        return False
+
+
+def split_kv_active() -> bool:
+    return _SPLIT_KV.get()
+
+
+def logits_constraint(x: jax.Array) -> jax.Array:
+    """Vocab-sharded logits [B, c, V]: batch over data axes, V over model.
+    Only active when an activation spec is installed (i.e., running under a
+    mesh); single-device tests are untouched."""
+    spec = _ACT_SPEC.get()
+    if spec is None:
+        return x
+    batch_ax = list(spec)[0] if len(list(spec)) else None
+    return jax.lax.with_sharding_constraint(x, P(batch_ax, None, "model"))
+
+
+# --------------------------------------------------------- parameter rules --
+
+def _param_rules(D, M):
+    """(regex over param path) -> PartitionSpec. First match wins.
+    Paths look like 'layers/attn/wq', 'mamba/in_proj', 'shared/ffn/w_down'."""
+    return [
+        # --- embeddings / head. The embed table shards on d_model ONLY:
+        # vocab-sharding turns the token gather (and the scatter-add of its
+        # gradient) into an unsharded fp32 table materialization under GSPMD
+        # (§Perf train/i3 — 2.3GB x many copies at dbrx scale).
+        (r"^embed$",                 P(None, D)),
+        (r"^head$",                  P(D, M)),
+        # --- MoE (stacked [L, E, ...])
+        (r"moe/router$",             P(None, D, None)),
+        (r"moe/(w_gate|w_up)$",      P(None, M, D, None)),
+        (r"moe/w_down$",             P(None, M, None, D)),
+        (r"moe/shared_gate$",        P()),
+        (r"moe/shared/(w_gate|w_up)$", P(None, D, M)),
+        (r"moe/shared/w_down$",      P(None, M, D)),
+        # --- attention (stacked [L, d, h*hd] or shared [d, h*hd])
+        (r"layers/attn/(wq|wk|wv)$", P(None, D, M)),
+        (r"layers/attn/wo$",         P(None, M, D)),
+        (r"shared/attn/(wq|wk|wv)$", P(D, M)),
+        (r"shared/attn/wo$",         P(M, D)),
+        # --- dense FFN
+        (r"layers/ffn/(w_gate|w_up)$", P(None, D, M)),
+        (r"layers/ffn/w_down$",      P(None, M, D)),
+        (r"shared/ffn/(w_gate|w_up)$", P(D, M)),
+        (r"shared/ffn/w_down$",      P(M, D)),
+        # --- mamba2
+        (r"mamba/in_proj$",          P(None, D, None)),
+        (r"mamba/out_proj$",         P(None, M, D)),
+        (r"mamba/(conv_w|conv_b|A_log|dt_bias|D|gate_norm|norm)$", P()),
+        # --- rwkv6
+        (r"layers/(wr|wk|wv|wg)$",   P(None, D, M)),
+        (r"layers/wo$",              P(None, M, D)),
+        (r"layers/wk_ffn$",          P(None, D, M)),
+        (r"layers/wv_ffn$",          P(None, M, D)),
+        (r"layers/wr_ffn$",          P(None, D, M)),
+        (r"layers/(w_base|w_lora_a|w_lora_b|u|mix|mix_ffn)$", P()),
+        # --- everything else (norms, scales, biases): replicate
+        (r".*",                      P()),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+    return "/".join(parts)
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
+    """Drop sharding on any dim the mesh axes don't divide evenly (pjit
+    argument shardings require exact divisibility). This is the generic
+    guard for e.g. vocab=504, n_kv_heads=8 on a 16-wide model axis, batch=1."""
+    entries = list(spec) + [None] * (len(shape) - len(list(spec)))
+    out = []
+    for dim, ax in zip(shape, entries):
+        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0
+                   else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_specs(params_shape: Any, mesh, *, fsdp: bool = True) -> Any:
+    """Map an eval_shape'd params pytree -> pytree of PartitionSpec.
+
+    fsdp=False (serving): weights shard over the model axis only and
+    REPLICATE over data — decode must not all-gather parameters per token
+    (perf iteration decode/i1 in EXPERIMENTS.md §Perf).
+    """
+    D, M = (data_axes(mesh) if fsdp else None), "model"
+    rules = [(re.compile(pat), spec) for pat, spec in _param_rules(D, M)]
+    m_size = mesh.shape["model"]
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        # MoE expert tensors: EP over model when E divides, else TP on d_ff
+        if re.search(r"moe/(w_gate|w_up)$", s):
+            E = leaf.shape[1]
+            spec = (P(None, M, D, None) if E % m_size == 0
+                    else P(None, None, D, M))
+            return sanitize_spec(spec, leaf.shape, mesh)
+        if re.search(r"moe/w_down$", s):
+            E = leaf.shape[1]
+            spec = (P(None, M, None, D) if E % m_size == 0
+                    else P(None, None, M, D))
+            return sanitize_spec(spec, leaf.shape, mesh)
+        for pat, spec in rules:
+            if pat.search(s):
+                if len([a for a in spec]) > leaf.ndim:
+                    return P()
+                return sanitize_spec(spec, leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def param_shardings(params_shape: Any, mesh, *, fsdp: bool = True) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh, fsdp=fsdp))
+
+
+# ------------------------------------------------------------ cache rules --
+
+def cache_specs(cache_shape: Any, mesh, cfg, *, kv_mode: str = "auto") -> Any:
+    """KV/state cache sharding. kv_mode: 'head' | 'seq' | 'auto'.
+
+    'auto' = heads over model when n_kv_heads divides the model-axis size
+    (zero padding waste), else sequence-sharded split-KV.
+    """
+    D = data_axes(mesh)
+    m_size = mesh.shape["model"]
+    if kv_mode == "auto":
+        kv_mode = "head" if cfg.n_kv_heads % m_size == 0 else "seq"
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        if name in ("k", "v"):          # [L, B, Smax, Hkv, hd]
+            if kv_mode == "head":
+                spec = P(None, D, None, "model", None)
+            else:
+                spec = P(None, D, "model", None, None)
+        elif name == "ssm":             # [L, B, nh, hd, N]
+            spec = P(None, D, "model", None, None)
+        elif name == "conv":            # [L, B, K-1, conv_dim]
+            spec = P(None, D, None, "model")
+        elif name == "wkv":             # [L, B, H, hd, hd]
+            spec = P(None, D, None, "model", None)
+        elif name.startswith("shift"):  # [L, B, D]
+            spec = P(None, D, "model")
+        else:
+            return P()                  # index etc.
+        return sanitize_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def cache_shardings(cache_shape, mesh, cfg, *, kv_mode="auto"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(cache_shape, mesh, cfg, kv_mode=kv_mode))
+
+
+# ------------------------------------------------------------- input rules --
+
+def batch_spec(mesh, ndim: int = 2) -> P:
+    """Token batches: batch dim over compound data axes."""
+    D = data_axes(mesh)
+    return P(D, *([None] * (ndim - 1)))
+
+
+def batch_sharding(mesh, shape: tuple) -> NamedSharding:
+    """Batch sharding sanitized against the concrete shape (batch=1 cells
+    replicate instead of failing divisibility)."""
+    return NamedSharding(mesh, sanitize_spec(batch_spec(mesh, len(shape)),
+                                             shape, mesh))
+
+
+def hidden_spec(mesh, *, seq_shard: bool = True) -> P:
+    D = data_axes(mesh)
+    return P(D, "model" if seq_shard else None, None)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q [B,Hq,D]; k/v_cache [B,Smax,Hkv,D]; length scalar int (valid prefix).
+    Returns [B,Hq,D]."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(D)
+    valid = jnp.arange(S)[None, None, None, :] < length
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,76 @@
+"""jit'd public wrappers for the MXU-path matmul (batch-flattening, dtype policy)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import matmul_pallas, quant_matmul_pallas
+
+
+def _flatten_leading(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "stationary", "interpret"))
+def mxu_matmul(x: jax.Array, w: jax.Array, *, bm=128, bk=128, bn=128,
+               stationary: str = "output", interpret: bool = True) -> jax.Array:
+    """[..., K] @ [K, N] on the aligned MXU path. Shapes must be aligned."""
+    x2, lead = _flatten_leading(x)
+    y = matmul_pallas(x2, w, bm=bm, bk=bk, bn=bn, stationary=stationary,
+                      out_dtype=x.dtype, interpret=interpret)
+    return y.reshape(*lead, w.shape[-1])
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def mxu_quant_matmul(x: jax.Array, wq: jax.Array, scale: jax.Array, *,
+                     bm=128, bk=128, bn=128, interpret: bool = True) -> jax.Array:
+    x2, lead = _flatten_leading(x)
+    y = quant_matmul_pallas(x2, wq, scale, bm=bm, bk=bk, bn=bn,
+                            out_dtype=x.dtype, interpret=interpret)
+    return y.reshape(*lead, wq.shape[-1])
+
+
+def quantize_weight(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric int8 weight quantization (W8A16-style)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    wq = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
+                  -127, 127).astype(jnp.int8)
+    return wq, scale.astype(jnp.float32)
+
+
+def quantize_weight_int4(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """W4A16 (the paper's deployment format): per-column symmetric int4,
+    two weights packed per int8 byte along K (rows 2r, 2r+1 -> lo, hi)."""
+    K, N = w.shape
+    assert K % 2 == 0
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scale = jnp.where(amax > 0, amax / 7.0, 1.0)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
+                 -7, 7).astype(jnp.int8)
+    lo = q[0::2] & 0x0F
+    hi = q[1::2] & 0x0F
+    packed = (lo | (hi << 4)).astype(jnp.int8)
+    return packed, scale.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def mxu_q4_matmul(x: jax.Array, wq4: jax.Array, scale: jax.Array, *,
+                  bm=128, bk=128, bn=128, interpret: bool = True) -> jax.Array:
+    from .kernel import q4_matmul_pallas
+    x2, lead = _flatten_leading(x)
+    y = q4_matmul_pallas(x2, wq4, scale, bm=bm, bk=bk, bn=bn,
+                         out_dtype=x.dtype, interpret=interpret)
+    return y.reshape(*lead, wq4.shape[-1])
+
+
+def dequant_int4_ref(wq4: jax.Array, scale: jax.Array) -> jax.Array:
+    """Unpack oracle for tests."""
+    lo = (jnp.left_shift(wq4, 4) >> 4).astype(jnp.float32)
+    hi = (wq4 >> 4).astype(jnp.float32)
+    K2, N = wq4.shape
+    q = jnp.stack([lo, hi], axis=1).reshape(2 * K2, N)
+    return q * scale[None, :]

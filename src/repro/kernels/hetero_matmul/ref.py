@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the hetero (MXU-path) matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, *, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(out_dtype)
+
+
+def quant_matmul_ref(x, wq, scale, *, out_dtype=None):
+    """Weight-only quantized matmul oracle: wq int8 [K,N], scale f32 [N]."""
+    out_dtype = out_dtype or x.dtype
+    w = wq.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w).astype(out_dtype)

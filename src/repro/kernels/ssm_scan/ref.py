@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: one SSD (Mamba2) chunk step.
+
+Given a chunk of dt-weighted inputs xb [B,L,nh,hd], in/out projections
+B_,C_ [B,L,N], inclusive log-decay cumsum seg [B,L,nh] and incoming state
+S_prev [B,nh,hd,N], produce (y [B,L,nh,hd], S_new). Matches
+repro.models.mamba2.ssd_chunked's scan body exactly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xb, B_, C_, seg, S_prev):
+    L = xb.shape[1]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    CB = jnp.einsum("bin,bjn->bij", C_, B_)
+    dec = jnp.exp(seg[:, :, None, :] - seg[:, None, :, :])
+    att = CB[..., None] * jnp.where(tri[None, :, :, None], dec, 0.0)
+    y = jnp.einsum("bijh,bjhp->bihp", att, xb)
+    y = y + jnp.einsum("bin,bhpn->bihp", C_, S_prev) * jnp.exp(seg)[..., None]
+    tot = seg[:, -1, :]
+    w_in = jnp.exp(tot[:, None, :] - seg)
+    S_new = (jnp.exp(tot)[:, :, None, None] * S_prev
+             + jnp.einsum("bjhp,bjn,bjh->bhpn", xb, B_, w_in))
+    return y, S_new

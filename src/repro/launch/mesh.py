@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+A function (not a module-level constant) so importing never touches jax device
+state. Single pod = 16x16 = 256 chips ("data", "model"); multi-pod adds a
+leading "pod" axis (2 pods = 512 chips). Batch/FSDP dims shard over the
+compound ("pod", "data") axes so N-pod scaling only grows the leading axis;
+gradient reductions then naturally hierarchize: reduce-scatter over intra-pod
+ICI first, cross-pod DCI last.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Compound batch/FSDP axes: ('pod','data') on multi-pod meshes."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_axes(mesh) -> tuple:
+    return ("model",)

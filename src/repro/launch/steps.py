@@ -1,0 +1,171 @@
+"""Step builders + input specs for every (arch x shape) cell.
+
+``make_step_and_specs`` returns (jitted_fn, example_args) where every example
+arg is a sharding-annotated ShapeDtypeStruct — lowering/compiling them is the
+multi-pod dry-run. The same builders back the real train/serve launchers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (activation_sharding, batch_sharding,
+                                        batch_spec, cache_shardings,
+                                        hidden_spec, param_shardings,
+                                        split_kv_enabled)
+from repro.models import build_model
+from repro.training import optimizer as opt
+
+
+def _sds(tree_shapes, tree_shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_shapes, tree_shardings)
+
+
+def _replicated(tree_shapes, mesh):
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep),
+        tree_shapes)
+
+
+def _input_struct(cfg: ModelConfig, batch: int, seq: int):
+    """Token ids, or precomputed modality-stub embeddings for [audio]."""
+    if cfg.family == "audio":
+        return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def state_shapes(model, opt_cfg: opt.AdamWConfig):
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return jax.eval_shape(lambda p: opt.init_state(p, opt_cfg), params)
+
+
+def state_shardings(model, mesh, opt_cfg: opt.AdamWConfig):
+    st = state_shapes(model, opt_cfg)
+    psh = param_shardings(st["params"], mesh)
+    return {
+        "params": psh, "m": psh, "v": psh,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def build_train_step(cfg: ModelConfig, mesh, *, unroll: bool = False,
+                     opt_cfg: Optional[opt.AdamWConfig] = None,
+                     seq_shard: bool = True):
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or opt.AdamWConfig()
+    act_spec = hidden_spec(mesh, seq_shard=seq_shard)
+
+    def train_step(state, batch):
+        def lf(p):
+            loss, metrics = model.loss(p, batch["inputs"], batch["targets"],
+                                       unroll=unroll)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state["params"])
+        new_state, om = opt.apply_updates(state, grads, opt_cfg)
+        return new_state, {"loss": loss, **metrics, **om}
+
+    ssh = state_shardings(model, mesh, opt_cfg)
+    jf = jax.jit(train_step, out_shardings=(ssh, None), donate_argnums=(0,))
+    return jf, model, ssh, act_spec
+
+
+def train_example_args(cfg, model, mesh, shape: ShapeSpec, ssh,
+                       opt_cfg: Optional[opt.AdamWConfig] = None):
+    opt_cfg = opt_cfg or opt.AdamWConfig()
+    st = state_shapes(model, opt_cfg)
+    state_sds = _sds(st, ssh)
+    B, S = shape.global_batch, shape.seq_len
+    inp = _input_struct(cfg, B, S)
+    bspec = {"inputs": batch_sharding(mesh, inp.shape),
+             "targets": batch_sharding(mesh, (B, S))}
+    batch_sds = _sds({"inputs": inp,
+                      "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)},
+                     bspec)
+    return (state_sds, batch_sds)
+
+
+def build_serve_step(cfg: ModelConfig, mesh, shape: ShapeSpec, *,
+                     unroll: bool = False, kv_mode: str = "auto",
+                     serve_fsdp: bool = False):
+    """Prefill or decode step per the shape kind (encoder archs: encode).
+
+    serve_fsdp=False: weights TP-only (replicated over data) — serving must
+    not pay per-step parameter all-gathers (§Perf decode/i1)."""
+    model = build_model(cfg)
+    act_spec = hidden_spec(mesh, seq_shard=(shape.kind != "decode"))
+    psh = param_shardings(
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))), mesh,
+        fsdp=serve_fsdp)
+
+    if cfg.encoder_only:
+        def encode(params, inputs):
+            return model.encode(params, inputs, unroll=unroll)
+        jf = jax.jit(encode)
+        return jf, model, psh, None, act_spec
+
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(batch=shape.global_batch,
+                                 max_len=shape.seq_len))
+    m_size = mesh.shape["model"]
+    resolved_kv = kv_mode
+    if resolved_kv == "auto" and not cfg.attn_free:
+        resolved_kv = "head" if cfg.n_kv_heads % m_size == 0 else "seq"
+    csh = cache_shardings(cache_shapes, mesh, cfg, kv_mode=resolved_kv)
+    use_split = (shape.kind == "decode" and resolved_kv == "seq"
+                 and not cfg.attn_free and shape.seq_len % m_size == 0)
+
+    if shape.kind == "prefill":
+        def step(params, tokens, cache):
+            return model.prefill(params, tokens, cache, unroll=unroll)
+    else:
+        def step(params, token, cache):
+            with split_kv_enabled(use_split):
+                return model.decode_step(params, token, cache, unroll=unroll)
+
+    jf = jax.jit(step, out_shardings=(None, csh), donate_argnums=(2,))
+    return jf, model, psh, (cache_shapes, csh), act_spec
+
+
+def serve_example_args(cfg, model, mesh, shape: ShapeSpec, psh, cache_info):
+    params_sds = _sds(
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))), psh)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encoder_only:
+        tok = _input_struct(cfg, B, S)
+        tok = jax.ShapeDtypeStruct(tok.shape, tok.dtype,
+                                   sharding=batch_sharding(mesh, tok.shape))
+        return (params_sds, tok)
+    cache_shapes, csh = cache_info
+    cache_sds = _sds(cache_shapes, csh)
+    if shape.kind == "prefill":
+        tok = _input_struct(cfg, B, S)
+    else:
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok = jax.ShapeDtypeStruct(tok.shape, tok.dtype,
+                               sharding=batch_sharding(mesh, tok.shape))
+    return (params_sds, tok, cache_sds)
+
+
+def make_step_and_specs(cfg: ModelConfig, mesh, shape: ShapeSpec, *,
+                        unroll: bool = False, kv_mode: str = "auto",
+                        seq_shard: bool = True, serve_fsdp: bool = False):
+    """One-stop builder: returns (jitted_step, example_args, act_spec)."""
+    if shape.kind == "train":
+        jf, model, ssh, act_spec = build_train_step(cfg, mesh, unroll=unroll,
+                                                    seq_shard=seq_shard)
+        args = train_example_args(cfg, model, mesh, shape, ssh)
+    else:
+        jf, model, psh, cache_info, act_spec = build_serve_step(
+            cfg, mesh, shape, unroll=unroll, kv_mode=kv_mode,
+            serve_fsdp=serve_fsdp)
+        args = serve_example_args(cfg, model, mesh, shape, psh, cache_info)
+    return jf, args, act_spec

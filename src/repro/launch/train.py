@@ -1,0 +1,38 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-135m
+[--smoke] [--steps N] [--compress] [--seq N --batch N]``.
+
+On this CPU container, use --smoke (reduced config). On a real pod the same
+entry point runs the full config under make_production_mesh().
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.base import ShapeSpec
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    tcfg = TrainConfig(steps=args.steps, grad_compression=args.compress,
+                       ckpt_dir=args.ckpt_dir)
+    state, losses, monitor = train(cfg, tcfg, shape)
+    first, last = losses[0][1], losses[-1][1]
+    print(f"done: loss {first:.4f} -> {last:.4f} "
+          f"({len(monitor.events)} straggler events)")
+
+
+if __name__ == "__main__":
+    main()

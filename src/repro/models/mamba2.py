@@ -1,0 +1,331 @@
+"""Mamba2 (SSD) blocks + the zamba2-style hybrid assembly.
+
+SSD runs as a chunked scan: intra-chunk pairwise decay (all exponents <= 0,
+numerically safe), inter-chunk state passing. Decode is the exact one-step
+recurrence. The hybrid model interleaves a SHARED attention+FFN block (single
+param set, zamba2-style) every ``ssm.attn_every`` mamba layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import hidden_constraint
+
+from .layers import (attention, chunked_ce_loss, init_attention, init_swiglu,
+                     rms_norm, swiglu, _scan_or_unroll)
+
+
+# ------------------------------------------------------------- mamba2 block --
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return d_in, nh, conv_dim
+
+
+def init_mamba_block(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.d_state + nh     # z, x, B, C, dt
+    return {
+        "norm": jnp.ones((d,), dt),
+        "in_proj": (jax.random.normal(k1, (d, proj_out)) / math.sqrt(d)).astype(dt),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, conv_dim)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), dt),
+        "out_proj": (jax.random.normal(k3, (d_in, d)) / math.sqrt(d_in)).astype(dt),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. xbc: [B,S,C]; w: [K,C].
+    Returns (out [B,S,C], new_state [B,K-1,C])."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([state, xbc], axis=1)            # [B, S+K-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else state
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def ssd_chunked(xh, dt, A, B_, C_, *, chunk: int, unroll: bool = False,
+                ssm_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    xh: [B,S,nh,hd]  dt: [B,S,nh] (post-softplus)  A: [nh] (negative)
+    B_, C_: [B,S,N].  Returns (y [B,S,nh,hd], final_state [B,nh,hd,N]).
+    """
+    Bb, S, nh, hd = xh.shape
+    N = B_.shape[-1]
+    L = min(chunk, S)
+    S_orig = S
+    if S % L:       # pad with dt=0 steps: decay=1, input weight=0 -> state-neutral
+        pad = L - S % L
+        pt = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xh, dt, B_, C_ = pt(xh), pt(dt), pt(B_), pt(C_)
+        S += pad
+    nc = S // L
+
+    da = (dt * A[None, None, :]).astype(jnp.float32)      # [B,S,nh] (<=0)
+    xb = (xh * dt[..., None]).astype(jnp.float32)         # dt-weighted input
+    rs = lambda a: a.reshape(Bb, nc, L, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+    da_c, xb_c = rs(da), rs(xb)
+    B_c, C_c = rs(B_.astype(jnp.float32)), rs(C_.astype(jnp.float32))
+    seg = jnp.cumsum(da_c, axis=2)                        # [nc,B,L,nh] inclusive
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((Bb, nh, hd, N), jnp.float32)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(S_prev, xs):
+        xb_i, B_i, C_i, seg_i, da_i = xs                  # [B,L,...]
+        CB = jnp.einsum("bin,bjn->bij", C_i, B_i)         # [B,L,L]
+        # clamp the (masked-out) upper triangle to exponent<=0: exact on the
+        # used triangle, and prevents inf*0 -> NaN in the backward pass
+        expo = jnp.minimum(seg_i[:, :, None, :] - seg_i[:, None, :, :], 0.0)
+        dec = jnp.exp(expo)                               # [B,L,L,nh]
+        att = CB[..., None] * jnp.where(tri[None, :, :, None], dec, 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", att, xb_i)      # intra-chunk
+        y = y + jnp.einsum("bin,bhpn->bihp", C_i, S_prev) * jnp.exp(seg_i)[..., None]
+        tot = seg_i[:, -1, :]                              # [B,nh]
+        w_in = jnp.exp(tot[:, None, :] - seg_i)            # [B,L,nh] (<=0 exp)
+        S_new = (jnp.exp(tot)[:, :, None, None] * S_prev
+                 + jnp.einsum("bjhp,bjn,bjh->bhpn", xb_i, B_i, w_in))
+        return S_new, y
+
+    if unroll:
+        ys = []
+        for i in range(nc):
+            ssm_state, y = step(ssm_state, jax.tree.map(lambda a: a[i],
+                                                        (xb_c, B_c, C_c, seg, da_c)))
+            ys.append(y)
+        y = jnp.stack(ys)
+    else:
+        ssm_state, y = jax.lax.scan(step, ssm_state, (xb_c, B_c, C_c, seg, da_c))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(Bb, S, nh, hd)
+    return y[:, :S_orig], ssm_state
+
+
+def mamba_block(p, x, cfg, *, conv_state=None, ssm_state=None, unroll=False,
+                hetero_ctx=None):
+    """x: [B,S,D] -> (y, new_conv_state, new_ssm_state)."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = _dims(cfg)
+    B, S, D = x.shape
+    mm = hetero_ctx.matmul if hetero_ctx is not None else (
+        lambda a, b, name=None: a @ b)
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = mm(h, p["in_proj"], name="in_proj")
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, B_, C_ = jnp.split(xbc, [d_in, d_in + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, nh, s.head_dim)
+    y, new_ssm = ssd_chunked(xh, dt, A, B_, C_, chunk=s.chunk, unroll=unroll,
+                             ssm_state=ssm_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return (hidden_constraint(x + mm(y, p["out_proj"], name="out_proj")),
+            new_conv, new_ssm)
+
+
+def mamba_decode_step(p, x, cfg, conv_state, ssm_state, hetero_ctx=None):
+    """Exact single-step recurrence. x: [B,1,D]."""
+    s = cfg.ssm
+    d_in, nh, conv_dim = _dims(cfg)
+    B = x.shape[0]
+    mm = hetero_ctx.matmul if hetero_ctx is not None else (
+        lambda a, b, name=None: a @ b)
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = mm(h, p["in_proj"], name="in_proj")
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, B_, C_ = jnp.split(xbc, [d_in, d_in + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])[:, 0]
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, nh, s.head_dim).astype(jnp.float32)
+    da = jnp.exp(dt * A[None, :])                          # [B,nh]
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh, B_[:, 0].astype(jnp.float32), dt)
+    new_ssm = da[:, :, None, None] * ssm_state + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32), new_ssm)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return x + mm(y, p["out_proj"], name="out_proj"), new_conv, new_ssm
+
+
+# ----------------------------------------------------------- hybrid (zamba2) --
+
+def init_params(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, v = cfg.d_model, cfg.vocab_size
+    k_emb, k_m, k_a, k_f, k_head = jax.random.split(key, 5)
+    params = {
+        "embed": (jax.random.normal(k_emb, (v, d)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((d,), dt),
+        "head": (jax.random.normal(k_head, (d, v)) / math.sqrt(d)).astype(dt),
+        # ONE shared attention+ffn block (zamba2)
+        "shared": {
+            "attn_norm": jnp.ones((d,), dt),
+            "attn": init_attention(k_a, cfg),
+            "ffn_norm": jnp.ones((d,), dt),
+            "ffn": init_swiglu(k_f, d, cfg.d_ff, cfg.param_dtype),
+        },
+    }
+    mkeys = jax.random.split(k_m, cfg.n_layers)
+    params["mamba"] = jax.vmap(lambda k: init_mamba_block(k, cfg))(mkeys)
+    return params
+
+
+def _n_attn(cfg) -> int:
+    return cfg.n_layers // cfg.ssm.attn_every
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    d_in, nh, conv_dim = _dims(cfg)
+    s = cfg.ssm
+    return {
+        "k": jnp.zeros((_n_attn(cfg), batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((_n_attn(cfg), batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+        "conv": jnp.zeros((cfg.n_layers, batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, nh, s.head_dim, s.d_state),
+                         jnp.float32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _shared_block(sp, x, cfg, *, positions, kv, cache_index, unroll, hetero_ctx):
+    h = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+    a, nkv = attention(sp["attn"], h, cfg, positions=positions, cache=kv,
+                       cache_index=cache_index, unroll=unroll,
+                       hetero_ctx=hetero_ctx)
+    x = x + a
+    h = rms_norm(x, sp["ffn_norm"], cfg.norm_eps)
+    return hidden_constraint(x + swiglu(sp["ffn"], h, hetero_ctx=hetero_ctx)), nkv
+
+
+def _run(params, x, cfg, *, positions, cache=None, cache_index=None,
+         unroll=False, decode=False, hetero_ctx=None):
+    """Period structure: ``attn_every`` mamba layers then the shared block."""
+    ae = cfg.ssm.attn_every
+    np_ = _n_attn(cfg)
+    assert cfg.n_layers % ae == 0
+    reshape_p = lambda a: a.reshape(np_, ae, *a.shape[1:])
+    mparams = jax.tree.map(reshape_p, params["mamba"])
+
+    def period(x, pp, kv, conv_s, ssm_s):
+        new_conv, new_ssm = [], []
+        for j in range(ae):
+            lp = jax.tree.map(lambda a: a[j], pp)
+            cs = None if conv_s is None else conv_s[j]
+            ss = None if ssm_s is None else ssm_s[j]
+            if decode:
+                x, nc, ns = mamba_decode_step(lp, x, cfg, cs, ss,
+                                              hetero_ctx=hetero_ctx)
+            else:
+                x, nc, ns = mamba_block(lp, x, cfg, conv_state=cs, ssm_state=ss,
+                                        unroll=unroll, hetero_ctx=hetero_ctx)
+            new_conv.append(nc); new_ssm.append(ns)
+        x, nkv = _shared_block(params["shared"], x, cfg, positions=positions,
+                               kv=kv, cache_index=cache_index, unroll=unroll,
+                               hetero_ctx=hetero_ctx)
+        return x, nkv, jnp.stack(new_conv), jnp.stack(new_ssm)
+
+    if cache is None:   # training: no state tracking
+        if unroll:
+            for i in range(np_):
+                pp = jax.tree.map(lambda a: a[i], mparams)
+                x, _, _, _ = period(x, pp, None, None, None)
+            return x, None
+        def stepf(x, pp):
+            x, _, _, _ = period(x, pp, None, None, None)
+            return x, None
+        body = stepf
+        if cfg.remat:
+            from .layers import remat_policy_of
+            body = jax.checkpoint(stepf, policy=remat_policy_of(cfg))
+        x, _ = jax.lax.scan(body, x, mparams)
+        return x, None
+
+    conv_c = jax.tree.map(reshape_p, cache["conv"])
+    ssm_c = jax.tree.map(reshape_p, cache["ssm"])
+    if unroll:
+        ks, vs, convs, ssms = [], [], [], []
+        for i in range(np_):
+            pp = jax.tree.map(lambda a: a[i], mparams)
+            kv = {"k": cache["k"][i], "v": cache["v"][i]}
+            x, nkv, nc, ns = period(x, pp, kv, conv_c[i], ssm_c[i])
+            ks.append(nkv["k"]); vs.append(nkv["v"]); convs.append(nc); ssms.append(ns)
+        new_cache = {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                     "conv": jnp.concatenate(convs), "ssm": jnp.concatenate(ssms)}
+        return x, new_cache
+
+    def stepc(x, xs):
+        pp, k_l, v_l, cv, ss = xs
+        x, nkv, nc, ns = period(x, pp, {"k": k_l, "v": v_l}, cv, ss)
+        return x, (nkv["k"], nkv["v"], nc, ns)
+
+    x, (nk, nv, nconv, nssm) = jax.lax.scan(
+        stepc, x, (mparams, cache["k"], cache["v"], conv_c, ssm_c))
+    new_cache = {"k": nk, "v": nv,
+                 "conv": nconv.reshape(cfg.n_layers, *nconv.shape[2:]),
+                 "ssm": nssm.reshape(cfg.n_layers, *nssm.shape[2:])}
+    return x, new_cache
+
+
+def loss_fn(params, inputs, targets, cfg, *, unroll=False):
+    S = inputs.shape[1]
+    x = params["embed"][inputs].astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _ = _run(params, x, cfg, positions=positions, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = chunked_ce_loss(params["head"], x, targets, chunk=cfg.loss_chunk,
+                         unroll=unroll)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def prefill(params, tokens, cache, cfg, *, start_index=0, unroll=False,
+            hetero_ctx=None):
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    positions = start_index + jnp.arange(S, dtype=jnp.int32)
+    x, nc = _run(params, x, cfg, positions=positions, cache=cache,
+                 cache_index=start_index, unroll=unroll, hetero_ctx=hetero_ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1:, :] @ params["head"]).astype(jnp.float32)
+    nc["index"] = jnp.asarray(start_index + S, jnp.int32)
+    return logits, nc
+
+
+def decode_step(params, token, cache, cfg, *, unroll=False, hetero_ctx=None):
+    idx = cache["index"]
+    x = params["embed"][token].astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.full((1,), idx, jnp.int32)
+    x, nc = _run(params, x, cfg, positions=positions, cache=cache,
+                 cache_index=idx, unroll=unroll, decode=True,
+                 hetero_ctx=hetero_ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    nc["index"] = idx + 1
+    return logits, nc

@@ -1,0 +1,113 @@
+"""GShard-style top-k MoE with GROUPED capacity dispatch/combine einsums.
+
+Tokens are split into dispatch groups of ``moe.group_size`` (groups align
+with the data-sharded token dim); capacity is per group, so the one-hot
+dispatch/combine tensors are [G, Tg, E, Cg] with Tg*E*Cg ~ group^2*k*cf/E —
+bounded per device regardless of global batch. Expert tensors reshape to
+[E, G*Cg, D] for the expert FFN (MXU-friendly row counts; EP shards E over
+the model axis when divisible, else TP on d_ff — see sharding rules).
+Differentiable; Switch-style aux load-balance loss returned alongside.
+
+qwen2-moe-style shared experts are a dense SwiGLU (hidden = d_ff_shared)
+with a sigmoid shared-expert gate, added to the routed output.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_swiglu, swiglu
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": (jax.random.normal(keys[0], (d, m.n_experts)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(keys[1], (m.n_experts, d, m.d_ff_expert)) * s).astype(dt),
+        "w_up": (jax.random.normal(keys[2], (m.n_experts, d, m.d_ff_expert)) * s).astype(dt),
+        "w_down": (jax.random.normal(keys[3], (m.n_experts, m.d_ff_expert, d))
+                   / math.sqrt(m.d_ff_expert)).astype(dt),
+    }
+    if m.d_ff_shared:
+        p["shared"] = init_swiglu(keys[4], d, m.d_ff_shared, cfg.param_dtype)
+        p["shared_gate"] = jnp.zeros((d, 1), jnp.float32)
+    return p
+
+
+def _group_count(T: int, group_size: int) -> int:
+    G = max(1, T // max(group_size, 1))
+    while T % G:
+        G -= 1
+    return G
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg, hetero_ctx=None):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = _group_count(T, m.group_size)
+    Tg = T // G
+    xt = x.reshape(G, Tg, D)
+
+    # router product in compute dtype with fp32 accumulation — an fp32 cast
+    # of xt would materialize a full fp32 activation copy per layer
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(xt.dtype),
+                        preferred_element_type=jnp.float32)    # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)        # [G, Tg, k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    E = m.n_experts
+    cap = int(max(m.top_k, math.ceil(Tg / E * m.capacity_factor * m.top_k)))
+    cap = min(cap, Tg)
+
+    # position of each (token, k) within its expert's per-group queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # [G, Tg, k, E]
+    flat = onehot.reshape(G, Tg * m.top_k, E)
+    pos = (jnp.cumsum(flat, axis=1) * flat - 1).reshape(
+        G, Tg, m.top_k, E).max(-1)                             # [G, Tg, k]
+    keep = (pos >= 0) & (pos < cap)
+    pos = jnp.where(keep, pos, 0)
+
+    cd = x.dtype
+    # build [G, Tg, E, C] dispatch/combine by summing k rank-1 slot products
+    # in COMPUTE dtype (no [G,Tg,k,E,C] and no fp32 copies — §Perf moe/i2;
+    # gating weights round to bf16, an O(1e-3) relative perturbation)
+    disp = jnp.zeros((G, Tg, E, cap), cd)
+    combine = jnp.zeros((G, Tg, E, cap), cd)
+    for j in range(m.top_k):
+        e_oh = (jax.nn.one_hot(gate_idx[..., j], E, dtype=cd)
+                * keep[..., j, None].astype(cd))
+        c_oh = jax.nn.one_hot(pos[..., j], cap, dtype=cd)
+        outer = jnp.einsum("gte,gtc->gtec", e_oh, c_oh)
+        disp = disp + outer
+        combine = combine + outer * gate_vals[..., j, None, None].astype(cd)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, xt,
+                           preferred_element_type=cd)          # [G, E, C, D]
+    ei = expert_in.transpose(1, 0, 2, 3).reshape(E, G * cap, D)
+    g = jnp.einsum("ecd,edf->ecf", ei, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", ei, p["w_up"])
+    eo = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+    eo = eo.reshape(E, G, cap, D).transpose(1, 0, 2, 3)        # [G, E, C, D]
+    out = jnp.einsum("gtec,gecd->gtd", combine, eo,
+                     preferred_element_type=cd)
+
+    # Switch aux loss: E * mean_g sum_e f_e * P_e
+    f = (disp.sum(-1) > 0).astype(jnp.float32).mean(1)         # [G, E]
+    pm = probs.mean(1)
+    aux = E * jnp.mean(jnp.sum(f * pm, axis=-1))
+
+    out = out.reshape(T, D)
+    if m.d_ff_shared:
+        xt2 = x.reshape(T, D)
+        sg = jax.nn.sigmoid(xt2.astype(jnp.float32) @ p["shared_gate"]).astype(cd)
+        out = out + sg * swiglu(p["shared"], xt2, hetero_ctx=hetero_ctx)
+    return out.reshape(B, S, D), aux

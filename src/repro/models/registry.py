@@ -1,0 +1,54 @@
+"""Uniform model interface over all families.
+
+``build_model(cfg)`` returns a ``Model`` whose members are pure functions:
+    init(rng) -> params
+    loss(params, inputs, targets) -> (loss, metrics)        [train objective]
+    init_cache(batch, max_len, dtype) -> cache
+    prefill(params, tokens, cache) -> (last_logits, cache)
+    decode_step(params, token, cache) -> (logits, cache)
+Encoder-only archs expose ``encode`` instead of prefill/decode.
+All accept ``unroll=`` (roofline cost probes) and ``hetero_ctx=`` (the
+HeteroInfer partitioned-matmul context) keyword args where meaningful.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from . import mamba2, rwkv6, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    loss: Callable
+    init_cache: Optional[Callable]
+    prefill: Optional[Callable]
+    decode_step: Optional[Callable]
+    encode: Optional[Callable] = None
+
+
+def build_model(cfg) -> Model:
+    if cfg.rwkv is not None:
+        mod = rwkv6
+    elif cfg.ssm is not None:
+        mod = mamba2
+    else:
+        mod = transformer
+
+    init = partial(mod.init_params, cfg=cfg)
+    loss = partial(mod.loss_fn, cfg=cfg)
+    if cfg.encoder_only:
+        return Model(cfg=cfg, init=init, loss=loss, init_cache=None,
+                     prefill=None, decode_step=None,
+                     encode=partial(transformer.forward_hidden, cfg=cfg))
+    return Model(
+        cfg=cfg, init=init, loss=loss,
+        init_cache=partial(mod.init_cache, cfg),
+        prefill=partial(mod.prefill, cfg=cfg),
+        decode_step=partial(mod.decode_step, cfg=cfg),
+    )

@@ -1,0 +1,263 @@
+"""RWKV-6 ("Finch"): attention-free LM with data-dependent per-channel decay.
+
+Token-mix (WKV6) recurrence per head (state S in R^{hd x hd}):
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(w_base + lora(x_t)))
+
+Runs as a chunked state-passing scan; intra-chunk uses the pairwise log-space
+decay tensor (every exponent <= 0 -> no overflow; exact). A per-step scan
+(``wkv6_recurrent``) is the oracle; decode uses the exact one-step update.
+Simplifications vs the released checkpoints (documented in DESIGN.md):
+static token-shift mixing (the data-dependent part retained is the DECAY,
+Finch's headline feature), RMSNorm instead of LayerNorm.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import hidden_constraint
+
+from .layers import chunked_ce_loss, rms_norm
+
+
+def _heads(cfg):
+    hd = cfg.rwkv.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_layer(key, cfg) -> dict:
+    d, r = cfg.d_model, cfg.rwkv.decay_lora
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d)
+    n = lambda k, sh, sc=s: (jax.random.normal(k, sh) * sc).astype(dt)
+    return {
+        "ln1": jnp.ones((d,), dt), "ln2": jnp.ones((d,), dt),
+        "mix": (0.5 * jnp.ones((5, d))).astype(dt),          # r,k,v,g,w shifts
+        "wr": n(ks[0], (d, d)), "wk": n(ks[1], (d, d)),
+        "wv": n(ks[2], (d, d)), "wg": n(ks[3], (d, d)),
+        "wo": n(ks[4], (d, d)),
+        "w_base": (-6.0 * jnp.ones((d,))).astype(jnp.float32),
+        "w_lora_a": n(ks[5], (d, r)), "w_lora_b": n(ks[6], (r, d), 0.01),
+        "u": (jax.random.normal(ks[7], (d,)) * 0.1).astype(jnp.float32),
+        "mix_ffn": (0.5 * jnp.ones((d,))).astype(dt),
+        "wk_ffn": n(ks[8], (d, cfg.d_ff)),
+        "wv_ffn": (jax.random.normal(ks[9], (cfg.d_ff, d)) / math.sqrt(cfg.d_ff)).astype(dt),
+        "wr_ffn": n(jax.random.split(ks[8])[0], (d, d)),
+    }
+
+
+def wkv6_chunked(r, k, v, lw, u, *, chunk: int, state: Optional[jax.Array] = None,
+                 unroll: bool = False):
+    """r,k,v,lw: [B,S,H,hd]; lw = log decay (<=0). u: [H,hd].
+    Returns (y [B,S,H,hd], final state [B,H,hd,hd])."""
+    B, S, H, hd = r.shape
+    L = min(chunk, S)
+    S_orig = S
+    if S % L:     # pad with decay=1 (lw=0), k=0 steps: state-neutral
+        pad = L - S % L
+        pt = lambda a: jnp.pad(a, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        r, k, v, lw = pt(r), pt(k), pt(v), pt(lw)
+        S += pad
+    nc = S // L
+    f32 = jnp.float32
+    rs = lambda a: a.astype(f32).reshape(B, nc, L, H, hd).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, lwc = rs(r), rs(k), rs(v), rs(lw)
+    # exclusive cumsum of log-decay within chunk
+    cs = jnp.cumsum(lwc, axis=2) - lwc                     # [nc,B,L,H,hd]
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), f32)
+    tri_s = jnp.tril(jnp.ones((L, L), bool), -1)           # strict lower
+
+    def step(S_prev, xs):
+        r_i, k_i, v_i, lw_i, cs_i = xs                     # [B,L,H,hd]
+        # pairwise decay: exp(cs_q - cs_j - lw_j) for j < q  (exponent <= 0
+        # on the used strict-lower triangle; clamp the masked rest so the
+        # backward pass never sees inf * 0)
+        expo = jnp.minimum(
+            cs_i[:, :, None] - cs_i[:, None, :] - lw_i[:, None, :], 0.0)
+        dec = jnp.where(tri_s[None, :, :, None, None], jnp.exp(expo), 0.0)
+        att = jnp.einsum("bqhc,bqjhc,bjhc->bqjh", r_i, dec, k_i)
+        y = jnp.einsum("bqjh,bjhd->bqhd", att, v_i)        # intra (strict past)
+        y = y + (r_i * u[None, None] * k_i).sum(-1, keepdims=True) * v_i  # u bonus
+        y = y + jnp.einsum("bqhc,bhcd->bqhd", r_i * jnp.exp(cs_i), S_prev)
+        tot = cs_i[:, -1] + lw_i[:, -1]                    # [B,H,hd] full-chunk sum
+        w_k = jnp.exp(tot[:, None] - cs_i - lw_i)          # (<=0 exp)
+        S_new = (jnp.exp(tot)[..., None] * S_prev
+                 + jnp.einsum("bjhc,bjhd->bhcd", k_i * w_k, v_i))
+        return S_new, y
+
+    xs_all = (rc, kc, vc, lwc, cs)
+    if unroll:
+        ys = []
+        for i in range(nc):
+            state, y = step(state, jax.tree.map(lambda a: a[i], xs_all))
+            ys.append(y)
+        y = jnp.stack(ys)
+    else:
+        state, y = jax.lax.scan(step, state, xs_all)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return y[:, :S_orig], state
+
+
+def wkv6_recurrent(r, k, v, lw, u, *, state=None):
+    """Per-step oracle (exact recurrence)."""
+    B, S, H, hd = r.shape
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), f32)
+
+    def step(S_prev, xs):
+        r_t, k_t, v_t, lw_t = [a.astype(f32) for a in xs]  # [B,H,hd]
+        kv = jnp.einsum("bhc,bhd->bhcd", k_t, v_t)
+        y = jnp.einsum("bhc,bhcd->bhd", r_t, S_prev + u[None, ..., None] * kv)
+        S_new = jnp.exp(lw_t)[..., None] * S_prev + kv
+        return S_new, y
+
+    xs = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), (r, k, v, lw))
+    state, y = jax.lax.scan(step, state, xs)
+    return y.transpose(1, 0, 2, 3), state
+
+
+def _token_mix(p, x, cfg, *, shift_state, wkv_state, unroll, decode=False):
+    """x: [B,S,D]. Returns (out, new_shift [B,D], new_wkv [B,H,hd,hd])."""
+    B, S, D = x.shape
+    H, hd = _heads(cfg)
+    prev = (jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+            if S > 1 else shift_state[:, None])
+    mixed = [x * m + prev * (1 - m) for m in p["mix"]]
+    xr, xk, xv, xg, xw = mixed
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)) \
+        @ p["w_lora_b"].astype(jnp.float32)
+    lw = -jnp.exp(p["w_base"][None, None] + lora)          # log decay <= 0
+    lw = jnp.clip(lw, -40.0, -1e-5).reshape(B, S, H, hd)
+    u = p["u"].reshape(H, hd)
+    if decode:
+        y, new_wkv = wkv6_recurrent(r, k, v, lw, u, state=wkv_state)
+    else:
+        y, new_wkv = wkv6_chunked(r, k, v, lw, u, chunk=cfg.rwkv.chunk,
+                                  state=wkv_state, unroll=unroll)
+    y = rms_norm(y.reshape(B * S, H, hd), jnp.ones((hd,), y.dtype),
+                 cfg.norm_eps).reshape(B, S, D).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, x[:, -1], new_wkv
+
+
+def _channel_mix(p, x, *, shift_state):
+    B, S, D = x.shape
+    prev = (jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+            if S > 1 else shift_state[:, None])
+    xk = x * p["mix_ffn"] + prev * (1 - p["mix_ffn"])
+    kk = jnp.square(jax.nn.relu(xk @ p["wk_ffn"]))
+    rr = jax.nn.sigmoid(x @ p["wr_ffn"])
+    return rr * (kk @ p["wv_ffn"]), x[:, -1]
+
+
+def _layer(lp, x, cfg, st, unroll, decode):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    tm, s1, wkv = _token_mix(lp, h, cfg, shift_state=st["shift1"],
+                             wkv_state=st["wkv"], unroll=unroll, decode=decode)
+    x = x + tm
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    cm, s2 = _channel_mix(lp, h, shift_state=st["shift2"])
+    return hidden_constraint(x + cm), {"shift1": s1, "shift2": s2, "wkv": wkv}
+
+
+def init_params(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, v = cfg.d_model, cfg.vocab_size
+    k_emb, k_l, k_head = jax.random.split(key, 3)
+    lkeys = jax.random.split(k_l, cfg.n_layers)
+    return {
+        "embed": (jax.random.normal(k_emb, (v, d)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((d,), dt),
+        "head": (jax.random.normal(k_head, (d, v)) / math.sqrt(d)).astype(dt),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(lkeys),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    H, hd = _heads(cfg)
+    L, d = cfg.n_layers, cfg.d_model
+    return {"shift1": jnp.zeros((L, batch, d), dtype),
+            "shift2": jnp.zeros((L, batch, d), dtype),
+            "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+def _run(params, x, cfg, *, cache=None, unroll=False, decode=False):
+    B = x.shape[0]
+    H, hd = _heads(cfg)
+    zero_st = lambda: {"shift1": jnp.zeros((B, cfg.d_model), x.dtype),
+                       "shift2": jnp.zeros((B, cfg.d_model), x.dtype),
+                       "wkv": jnp.zeros((B, H, hd, hd), jnp.float32)}
+    if unroll:
+        new = {"shift1": [], "shift2": [], "wkv": []}
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            st = (zero_st() if cache is None else
+                  {k: cache[k][i] for k in ("shift1", "shift2", "wkv")})
+            x, ns = _layer(lp, x, cfg, st, unroll, decode)
+            for kk in new:
+                new[kk].append(ns[kk])
+        nc = {kk: jnp.stack(vv) for kk, vv in new.items()} if cache is not None else None
+        return x, nc
+
+    if cache is None:
+        def step(x, lp):
+            x, _ = _layer(lp, x, cfg, zero_st(), unroll, decode)
+            return x, None
+        body = step
+        if cfg.remat:
+            from .layers import remat_policy_of
+            body = jax.checkpoint(step, policy=remat_policy_of(cfg))
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, None
+
+    def stepc(x, xs):
+        lp, s1, s2, wkv = xs
+        x, ns = _layer(lp, x, cfg, {"shift1": s1, "shift2": s2, "wkv": wkv},
+                       unroll, decode)
+        return x, (ns["shift1"], ns["shift2"], ns["wkv"])
+
+    x, (n1, n2, nw) = jax.lax.scan(
+        stepc, x, (params["layers"], cache["shift1"], cache["shift2"],
+                   cache["wkv"]))
+    return x, {"shift1": n1, "shift2": n2, "wkv": nw}
+
+
+def loss_fn(params, inputs, targets, cfg, *, unroll=False):
+    x = params["embed"][inputs].astype(jnp.dtype(cfg.compute_dtype))
+    x, _ = _run(params, x, cfg, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = chunked_ce_loss(params["head"], x, targets, chunk=cfg.loss_chunk,
+                         unroll=unroll)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def prefill(params, tokens, cache, cfg, *, start_index=0, unroll=False,
+            hetero_ctx=None):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x, nc = _run(params, x, cfg, cache=cache, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1:, :] @ params["head"]).astype(jnp.float32)
+    nc["index"] = jnp.asarray(start_index + tokens.shape[1], jnp.int32)
+    return logits, nc
+
+
+def decode_step(params, token, cache, cfg, *, unroll=False, hetero_ctx=None):
+    x = params["embed"][token].astype(jnp.dtype(cfg.compute_dtype))
+    x, nc = _run(params, x, cfg, cache=cache, decode=True, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    nc["index"] = cache["index"] + 1
+    return logits, nc

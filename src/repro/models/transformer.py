@@ -1,0 +1,185 @@
+"""Decoder-only (and encoder-only) transformer LM: dense / MoE / VLM / audio.
+
+Layer stack runs under ``lax.scan`` over stacked per-layer params (small HLO;
+the production posture for 1000+-node compile times). ``unroll=True`` switches
+every loop to Python for the roofline cost probes.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import hidden_constraint
+
+from .layers import (attention, chunked_ce_loss, init_attention, init_swiglu,
+                     rms_norm, swiglu)
+from .moe import init_moe, moe_ffn
+
+
+def init_params(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    d, v = cfg.d_model, cfg.vocab_size
+    params = {
+        "embed": (jax.random.normal(k_emb, (v, d)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(k_head, (d, v)) / math.sqrt(d)).astype(dt)
+
+    def init_layer(k):
+        ka, kf = jax.random.split(k)
+        lp = {
+            "attn_norm": jnp.ones((d,), dt),
+            "attn": init_attention(ka, cfg),
+            "ffn_norm": jnp.ones((d,), dt),
+        }
+        if cfg.moe:
+            lp["moe"] = init_moe(kf, cfg)
+        else:
+            lp["ffn"] = init_swiglu(kf, d, cfg.d_ff, cfg.param_dtype)
+        return lp
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(init_layer)(layer_keys)
+    return params
+
+
+def _layer(lp, x, cfg, *, positions, kv=None, cache_index=None, unroll=False,
+           hetero_ctx=None):
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    attn_out, new_kv = attention(lp["attn"], h, cfg, positions=positions,
+                                 cache=kv, cache_index=cache_index,
+                                 unroll=unroll, hetero_ctx=hetero_ctx)
+    x = x + attn_out
+    h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.moe:
+        ffn_out, aux = moe_ffn(lp["moe"], h, cfg, hetero_ctx=hetero_ctx)
+    else:
+        ffn_out, aux = swiglu(lp["ffn"], h, hetero_ctx=hetero_ctx), jnp.zeros((), jnp.float32)
+    return hidden_constraint(x + ffn_out), new_kv, aux
+
+
+def _embed(params, inputs, cfg):
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        return params["embed"][inputs].astype(jnp.dtype(cfg.compute_dtype))
+    return inputs.astype(jnp.dtype(cfg.compute_dtype))   # modality-stub embeddings
+
+
+def _run_layers(params, x, cfg, *, positions, cache=None, cache_index=None,
+                unroll=False, hetero_ctx=None):
+    """Apply all layers; returns (x, new_cache_kv_stacked, aux_sum)."""
+    L = cfg.n_layers
+
+    def body(x, lp, kv):
+        return _layer(lp, x, cfg, positions=positions, kv=kv,
+                      cache_index=cache_index, unroll=unroll,
+                      hetero_ctx=hetero_ctx)
+
+    if unroll:
+        new_ks, new_vs, aux = [], [], jnp.zeros((), jnp.float32)
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            kv = (None if cache is None else
+                  {"k": cache["k"][i], "v": cache["v"][i]})
+            x, nkv, a = body(x, lp, kv)
+            aux = aux + a
+            if nkv is not None:
+                new_ks.append(nkv["k"]); new_vs.append(nkv["v"])
+        nc = ({"k": jnp.stack(new_ks), "v": jnp.stack(new_vs)}
+              if new_ks else None)
+        return x, nc, aux
+
+    if cache is None:
+        def step(carry, lp):
+            x, aux = carry
+            fn = body
+            if cfg.remat:
+                from .layers import remat_policy_of
+                fn = jax.checkpoint(lambda x, lp: body(x, lp, None)[::2],
+                                    policy=remat_policy_of(cfg))
+                x2, a = fn(x, lp)
+            else:
+                x2, _, a = body(x, lp, None)
+            return (x2, aux + a), None
+        (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+        return x, None, aux
+
+    def step(carry, xs):
+        x, aux = carry
+        lp, k_l, v_l = xs
+        x2, nkv, a = body(x, lp, {"k": k_l, "v": v_l})
+        return (x2, aux + a), (nkv["k"], nkv["v"])
+
+    (x, aux), (nk, nv) = jax.lax.scan(
+        step, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], cache["k"], cache["v"]))
+    return x, {"k": nk, "v": nv}, aux
+
+
+def _head_matrix(params, cfg):
+    return (params["embed"].T if cfg.tie_embeddings else params["head"])
+
+
+def loss_fn(params, inputs, targets, cfg, *, unroll=False):
+    """Training objective: next-token CE (+ MoE aux). inputs [B,S] or [B,S,D]."""
+    S = inputs.shape[1]
+    x = _embed(params, inputs, cfg)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _, aux = _run_layers(params, x, cfg, positions=positions, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = chunked_ce_loss(_head_matrix(params, cfg), x, targets,
+                         chunk=cfg.loss_chunk, unroll=unroll)
+    return ce + 0.01 * aux / max(cfg.n_layers, 1), {"ce": ce, "aux": aux}
+
+
+def forward_hidden(params, inputs, cfg, *, unroll=False):
+    """Full-sequence hidden states (no cache) — used by encoder eval."""
+    S = inputs.shape[1]
+    x = _embed(params, inputs, cfg)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _, _ = _run_layers(params, x, cfg, positions=positions, unroll=unroll)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, tokens, cache, cfg, *, start_index=0, unroll=False,
+            hetero_ctx=None):
+    """Process a prompt (or prompt chunk, for chunked prefill), write the
+    cache at [start_index, start_index+S), return last-token logits."""
+    B, S = tokens.shape[0], tokens.shape[1]
+    x = _embed(params, tokens, cfg)
+    positions = start_index + jnp.arange(S, dtype=jnp.int32)
+    x, nkv, _ = _run_layers(params, x, cfg, positions=positions,
+                            cache=cache, cache_index=start_index,
+                            unroll=unroll, hetero_ctx=hetero_ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1:, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    return logits, {"k": nkv["k"], "v": nkv["v"],
+                    "index": jnp.asarray(start_index + S, jnp.int32)}
+
+
+def decode_step(params, token, cache, cfg, *, unroll=False, hetero_ctx=None):
+    """One autoregressive step. token: [B, 1] int32. Returns (logits, cache).
+    ``cache['index']`` may be a scalar (uniform batch) or [B] per-slot
+    lengths (continuous batching)."""
+    idx = cache["index"]
+    x = _embed(params, token, cfg)
+    positions = (idx[:, None].astype(jnp.int32) if jnp.ndim(idx) == 1
+                 else jnp.full((1,), idx, jnp.int32))
+    x, nkv, _ = _run_layers(params, x, cfg, positions=positions,
+                            cache=cache, cache_index=idx, unroll=unroll,
+                            hetero_ctx=hetero_ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ _head_matrix(params, cfg)).astype(jnp.float32)
+    return logits, {"k": nkv["k"], "v": nkv["v"], "index": idx + 1}

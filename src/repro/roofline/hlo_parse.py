@@ -1,0 +1,81 @@
+"""Parse collective ops + byte counts out of compiled HLO text.
+
+``cost_analysis`` does not report collective traffic, so we extract every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+from the post-optimization HLO and sum operand bytes, tracking replica-group
+sizes so ring-traffic factors can be applied (see roofline.analysis).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %ag = bf16[2,1024]{1,0} all-gather(%x), replica_groups=...
+#        %t = (f32[8]{0}, f32[4]{0}) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    # op -> [count, total_bytes, typical group size]
+    ops: dict = field(default_factory=lambda: defaultdict(lambda: [0, 0, 1]))
+
+    def as_dict(self) -> dict:
+        return {k: {"count": v[0], "bytes": v[1], "group": v[2]}
+                for k, v in self.ops.items()}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:      # async pair: count only the -start
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shapes"))
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            group = gm.group(1).count(",") + 1
+        else:
+            gm2 = _GROUPS2_RE.search(line)
+            group = int(gm2.group(2)) if gm2 else 1
+        rec = stats.ops[op]
+        rec[0] += 1
+        rec[1] += nbytes
+        rec[2] = max(rec[2], group)
+    return stats
+
+
+def collective_summary(hlo_text: str) -> dict:
+    return parse_collectives(hlo_text).as_dict()

@@ -1,0 +1,143 @@
+"""Continuous-batching serving scheduler.
+
+Slot-based continuous batching over a shared KV cache: requests join free
+slots, prefill runs per-request as bucket-chunked pieces (the engine's
+activation-centric strategy applied at the scheduler level — aligned chunks
+take the static fast path, the ragged tail takes the flexible path), decode
+steps run batched across all active slots with PER-SLOT cache indices.
+Finished slots free immediately and the queue backfills (orca-style
+iteration-level scheduling, sized for mobile-to-pod deployments).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+
+from .sampler import SamplerConfig, sample
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 16
+    output: list = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg, params=None, *, max_batch: int = 4,
+                 max_len: int = 512, buckets=(64, 128, 256),
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+        assert cfg.moe is None or True
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(seed))
+        self.B, self.S = max_batch, max_len
+        self.buckets = tuple(sorted(buckets))
+        self.sampler = sampler
+        self.rng = jax.random.PRNGKey(seed)
+
+        self.cache = self.model.init_cache(batch=max_batch, max_len=max_len)
+        self.cache["index"] = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.budget: list[int] = [0] * max_batch
+        self.lengths: list[int] = [0] * max_batch   # python-side slot lengths
+
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+        self._prefill_piece = jax.jit(self._prefill_piece_impl,
+                                      static_argnames=("chunk",),
+                                      donate_argnums=(1,))
+
+    # ------------------------------------------------------------ plumbing --
+    def _prefill_piece_impl(self, params, cache, tokens, slot, start, *,
+                            chunk: int):
+        """Prefill one chunk of one request into its slot of the big cache."""
+        sub = {"k": jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1),
+               "v": jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1),
+               "index": start}
+        from repro.models import transformer
+        logits, new = transformer.prefill(params, tokens[None, :], sub,
+                                          self.cfg, start_index=start)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], new["k"], slot, axis=1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], new["v"], slot, axis=1)
+        return logits, cache
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for b in range(self.B):
+            if self.slots[b] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[b] = req
+                S = len(req.prompt)
+                # bucket-chunked prefill (aligned chunks + ragged tail)
+                chunks, rem, idx = [], S, 0
+                for bk in sorted(self.buckets, reverse=True):
+                    while rem >= bk:
+                        chunks.append(bk)
+                        rem -= bk
+                if rem:
+                    chunks.append(rem)
+                logits = None
+                for c in chunks:
+                    piece = jnp.asarray(req.prompt[idx: idx + c], jnp.int32)
+                    logits, self.cache = self._prefill_piece(
+                        self.params, self.cache, piece,
+                        jnp.asarray(b), jnp.asarray(idx, jnp.int32), chunk=c)
+                    idx += c
+                self.cache["index"] = self.cache["index"].at[b].set(S)
+                self.lengths[b] = S
+                self.rng, k = jax.random.split(self.rng)
+                first = int(sample(logits[:, -1, :], k, self.sampler)[0])
+                req.output.append(first)
+                self.budget[b] = req.max_new_tokens - 1
+
+    # ----------------------------------------------------------------- run --
+    def step(self):
+        """One scheduler tick: admit waiting requests, one batched decode."""
+        self._admit()
+        active = [b for b in range(self.B) if self.slots[b] is not None]
+        if not active:
+            return False
+        last = np.zeros((self.B, 1), np.int32)
+        for b in active:
+            last[b, 0] = self.slots[b].output[-1]
+        # decode_step itself advances every slot's index by one
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(last), self.cache)
+        self.rng, k = jax.random.split(self.rng)
+        toks = np.asarray(sample(logits[:, -1, :], k, self.sampler))
+        for b in active:
+            req = self.slots[b]
+            req.output.append(int(toks[b]))
+            self.budget[b] -= 1
+            self.lengths[b] += 1
+            if self.budget[b] <= 0 or self.lengths[b] + 1 >= self.S:
+                req.done = True
+                self.slots[b] = None           # free slot; queue backfills
+                self.lengths[b] = 0
+        return True
+
+    def run(self, requests: list[Request], max_ticks: int = 10_000):
+        for r in requests:
+            self.submit(r)
+        ticks = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return requests

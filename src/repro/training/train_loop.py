@@ -1,0 +1,93 @@
+"""End-to-end training driver (used by launch/train.py and the examples).
+
+Wires: model + sharding rules + AdamW + data pipeline + checkpointing +
+fault tolerance (heartbeat/straggler monitor, crash restart) + optional
+int8-EF gradient compression on the DP reduction.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (compress_grads_with_feedback,
+                                           init_error)
+from repro.distributed.sharding import activation_sharding, hidden_spec
+from repro.models import build_model
+from repro.training import optimizer as opt
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import SyntheticLM
+from repro.training.fault_tolerance import (RestartPolicy, StepMonitor,
+                                            run_resilient)
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    save_every: int = 50
+    ckpt_dir: str = "artifacts/ckpt"
+    grad_compression: bool = False
+    seq_shard: bool = False        # SP only useful on real meshes
+    opt: opt.AdamWConfig = opt.AdamWConfig()
+
+
+def make_train_step(cfg, tcfg: TrainConfig, *, unroll: bool = False):
+    model = build_model(cfg)
+
+    def train_step(state, batch):
+        def lf(p):
+            loss, metrics = model.loss(p, batch["inputs"], batch["targets"],
+                                       unroll=unroll)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state["params"])
+        if tcfg.grad_compression:
+            grads, new_err = compress_grads_with_feedback(
+                grads, state["ef_error"])
+        new_state, om = opt.apply_updates(
+            {k: state[k] for k in ("params", "m", "v", "step")}, grads,
+            tcfg.opt)
+        if tcfg.grad_compression:
+            new_state["ef_error"] = new_err
+        return new_state, {"loss": loss, **metrics, **om}
+
+    return model, jax.jit(train_step, donate_argnums=(0,))
+
+
+def train(cfg, tcfg: TrainConfig, shape=None, *, data=None,
+          fail_injector=None, log=print):
+    model, step_fn = make_train_step(cfg, tcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init_state(params, tcfg.opt)
+    if tcfg.grad_compression:
+        state["ef_error"] = init_error(params)
+
+    seq = shape.seq_len if shape else 128
+    batch = shape.global_batch if shape else 8
+    data = data or SyntheticLM(cfg.vocab_size, seq, batch)
+    ckpt = CheckpointManager(tcfg.ckpt_dir)
+
+    losses = []
+
+    def logged_step(state, batch):
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        step = int(state["step"])
+        if step % tcfg.log_every == 0 or step == 1:
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            log(f"step {step:5d} loss {loss:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"({time.perf_counter() - t0:.2f}s)")
+        return state, metrics
+
+    state, metrics, monitor = run_resilient(
+        tcfg.steps, state=state, data=data, step_fn=logged_step,
+        ckpt=ckpt, save_every=tcfg.save_every,
+        policy=RestartPolicy(), fail_injector=fail_injector, log=log)
+    return state, losses, monitor

@@ -1,0 +1,11 @@
+import os
+
+# Tests run single-device unless a test makes its own host mesh via XLA flags
+# in a subprocess. Do NOT set xla_force_host_platform_device_count here (the
+# dry-run owns that); 8 host devices are enabled for the distributed tests
+# only, which is safe for everything else.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,116 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the same
+family, one forward/train step on CPU, shape + finiteness assertions; plus
+prefill/decode consistency and the chunked-recurrence oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED_ARCHS, get_smoke_config
+from repro.models import build_model
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 2, 64
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+
+    loss, metrics = jax.jit(lambda p, t: model.loss(p, t, t))(params, toks)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    grads = jax.grad(lambda p: model.loss(p, toks, toks)[0])(params)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gn)), f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if not get_smoke_config(a).encoder_only])
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 2, 33
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(batch=B, max_len=64)
+    logits, cache = jax.jit(model.prefill)(params, toks, cache)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache = jax.jit(model.decode_step)(params, tok, cache)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all())
+    assert int(cache["index"]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "qwen3-1.7b", "zamba2-2.7b",
+                                  "rwkv6-3b"])
+def test_prefill_decode_consistency(arch):
+    """decode(token_S | prefill(tokens[:S])) == prefill(tokens[:S+1]) logits."""
+    cfg = get_smoke_config(arch).with_(param_dtype="float32",
+                                       compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 2, 21
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(batch=B, max_len=48, dtype=jnp.float32)
+    ref, _ = model.prefill(params, toks, cache)
+    cache = model.init_cache(batch=B, max_len=48, dtype=jnp.float32)
+    _, cache = model.prefill(params, toks[:, :-1], cache)
+    dec, _ = model.decode_step(params, toks[:, -1:], cache)
+    assert jnp.max(jnp.abs(ref[:, 0] - dec[:, 0])) < 1e-4
+
+
+def test_moe_consistency_with_high_capacity():
+    cfg = get_smoke_config("dbrx-132b").with_(param_dtype="float32",
+                                              compute_dtype="float32")
+    cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(RNG)
+    toks = jax.random.randint(RNG, (2, 17), 0, cfg.vocab_size)
+    cache = model.init_cache(batch=2, max_len=32, dtype=jnp.float32)
+    ref, _ = model.prefill(params, toks, cache)
+    cache = model.init_cache(batch=2, max_len=32, dtype=jnp.float32)
+    _, cache = model.prefill(params, toks[:, :-1], cache)
+    dec, _ = model.decode_step(params, toks[:, -1:], cache)
+    assert jnp.max(jnp.abs(ref[:, 0] - dec[:, 0])) < 1e-4
+
+
+def test_chunked_prefill_matches_full():
+    """Bucket-chunked prefill (activation-centric serving path) == one shot."""
+    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
+                                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 1, 50
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(batch=B, max_len=64, dtype=jnp.float32)
+    ref, _ = model.prefill(params, toks, cache)
+    from repro.models import transformer
+    cache = model.init_cache(batch=B, max_len=64, dtype=jnp.float32)
+    out = None
+    for start, end in [(0, 32), (32, 50)]:
+        out, cache = transformer.prefill(params, toks[:, start:end], cache,
+                                         cfg, start_index=start)
+    assert jnp.max(jnp.abs(ref - out)) < 1e-4
+
+
+def test_unroll_mode_matches_scan():
+    """Cost-probe unrolled programs must be numerically identical."""
+    for arch in ["llama3-8b", "zamba2-2.7b", "rwkv6-3b", "qwen2-moe-a2.7b"]:
+        cfg = get_smoke_config(arch).with_(param_dtype="float32",
+                                           compute_dtype="float32",
+                                           remat=False)
+        model = build_model(cfg)
+        params = model.init(RNG)
+        toks = jax.random.randint(RNG, (2, 32), 0, cfg.vocab_size)
+        l1, _ = model.loss(params, toks, toks)
+        l2, _ = model.loss(params, toks, toks, unroll=True)
+        assert abs(float(l1) - float(l2)) < 1e-5, arch
