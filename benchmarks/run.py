@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.bench_sync",              # Figs 16/17
     "benchmarks.bench_ablation",          # Fig 18
     "benchmarks.bench_e2e",               # Fig 12 + Table 4
+    "benchmarks.bench_paged",             # paged vs dense KV at equal memory
     "benchmarks.roofline_report",         # §Roofline
 ]
 

@@ -1,0 +1,44 @@
+"""JAX version compatibility for the distributed layer.
+
+The repo targets the modern ``jax.shard_map`` / ``check_vma`` spelling; on
+older runtimes (0.4.x) that API lives in ``jax.experimental.shard_map`` and
+the replication-check kwarg is ``check_rep``. Route every call through here.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                    # jax >= 0.5
+    _shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+# independently of the top-level promotion, so probe the signature
+import inspect
+
+_params = inspect.signature(_shard_map).parameters
+_CHECK_KW = "check_vma" if "check_vma" in _params else "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    kw = {} if check_vma else {_CHECK_KW: False}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def get_mesh():
+    """The ambient mesh set by :func:`set_mesh` (abstract mesh on new JAX,
+    the thread-resources physical mesh on 0.4.x)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def set_mesh(mesh):
+    """Context manager entering ``mesh`` (``jax.sharding.set_mesh`` on new
+    JAX; the ``Mesh`` object itself is a context manager on 0.4.x)."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh

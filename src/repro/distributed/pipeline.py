@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 
 def pipeline_stats(n_micro: int, n_stages: int) -> dict:
     ticks = n_micro + n_stages - 1
@@ -71,7 +73,7 @@ def make_pipeline_forward(layer_fn: Callable, n_stages: int, n_micro: int,
             if n_stages > 1 else outs
         return outs
 
-    return jax.shard_map(
+    return shard_map(
         stage_prog, mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),

@@ -24,11 +24,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 NEG_INF = -1e30
 
 
 def _mesh_axes():
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.distributed.compat import get_mesh
+    mesh = get_mesh()
     names = mesh.axis_names
     data = tuple(n for n in names if n != "model")
     return mesh, data
@@ -86,7 +89,7 @@ def split_kv_decode_update_attend(q, k_new, v_new, k_cache, v_cache, idx):
         out = (num / jnp.where(den == 0.0, 1.0, den)[..., None])
         return out.reshape(Bl, 1, Hq, D).astype(qx.dtype), kc, vc
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(qs, qs, qs, cs, cs, P()),
         out_specs=(qs, cs, cs),

@@ -58,6 +58,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     import jax
     from repro.configs import get_config, SHAPES, cell_is_supported
     from repro.distributed.sharding import activation_sharding
+    from repro.distributed.compat import set_mesh
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import make_step_and_specs
     from repro.roofline.hlo_parse import collective_summary
@@ -87,7 +88,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             jf, args, act_spec = make_step_and_specs(
                 cfg, mesh, shape, unroll=bool(probe), kv_mode=kv_mode,
                 seq_shard=seq_shard, serve_fsdp=serve_fsdp)

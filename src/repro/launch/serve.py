@@ -1,8 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch llama3-8b --smoke
 --mode hetero-tensor --strategy hetero --requests 8``.
 
-Runs the HeteroInfer engine (single-stream, paper-faithful) or the
-continuous batcher (--batched) on synthetic prompts and prints tok/s.
+Runs the HeteroInfer engine (single-stream, paper-faithful), the dense
+continuous batcher (--batched), or the paged-KV batcher (--batched --paged,
+with --block-size / --max-blocks / --decode-width sizing the shared pool)
+on synthetic prompts and prints tok/s.
 """
 from __future__ import annotations
 
@@ -22,6 +24,14 @@ def main(argv=None):
                     choices=["online-prepare", "padding", "pipe", "hetero"])
     ap.add_argument("--no-fast-sync", action="store_true")
     ap.add_argument("--batched", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="use the paged (block-table) KV cache batcher")
+    ap.add_argument("--block-size", type=int, default=32,
+                    help="tokens per KV block (paged mode)")
+    ap.add_argument("--max-blocks", type=int, default=0,
+                    help="pool size in blocks; 0 = sized from --requests")
+    ap.add_argument("--decode-width", type=int, default=8,
+                    help="compiled decode lanes (paged mode)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=300)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -33,9 +43,25 @@ def main(argv=None):
     rng = np.random.default_rng(0)
 
     if args.batched:
-        from repro.serving.scheduler import ContinuousBatcher, Request
-        cb = ContinuousBatcher(cfg, max_batch=4,
-                               max_len=args.prompt_len + args.new_tokens + 8)
+        from repro.serving.scheduler import (ContinuousBatcher, PagedBatcher,
+                                             Request)
+        max_len = args.prompt_len + args.new_tokens + 8
+        if args.paged:
+            num_blocks = args.max_blocks or (
+                1 + args.requests * -(-max_len // args.block_size))
+            # cap per-request tables at the longest possible request, not
+            # the pool size: attention gathers a [W, NBmax*block_size] KV
+            # view, so NBmax drives per-step cost
+            cb = PagedBatcher(cfg, num_blocks=num_blocks,
+                              block_size=args.block_size,
+                              max_blocks_per_seq=-(-max_len
+                                                   // args.block_size),
+                              decode_width=args.decode_width)
+            label = (f"paged (bs={args.block_size}, "
+                     f"blocks={num_blocks}, W={args.decode_width})")
+        else:
+            cb = ContinuousBatcher(cfg, max_batch=4, max_len=max_len)
+            label = "batched"
         reqs = [Request(rid=i,
                         prompt=rng.integers(0, cfg.vocab_size,
                                             rng.integers(8, args.prompt_len)
@@ -46,8 +72,9 @@ def main(argv=None):
         cb.run(reqs)
         dt = time.perf_counter() - t0
         tok = sum(len(r.output) for r in reqs)
-        print(f"batched: {args.requests} reqs, {tok} tokens in {dt:.2f}s "
-              f"({tok / dt:.1f} tok/s)")
+        print(f"{label}: {args.requests} reqs, {tok} tokens in {dt:.2f}s "
+              f"({tok / dt:.1f} tok/s, peak concurrency "
+              f"{cb.peak_active})")
         return
 
     from repro.core.engine import InferenceEngine

@@ -172,6 +172,25 @@ def init_attention(key, cfg) -> dict:
     return p
 
 
+def _qkv_rope(p: dict, x: jax.Array, cfg, positions: jax.Array, hetero_ctx):
+    """Shared projection front-end: q/k/v matmuls, qk-norm, RoPE at the
+    tokens' absolute positions. Used by both the dense-cache and paged
+    attention paths so their numerics are identical by construction."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    mm = hetero_ctx.matmul if hetero_ctx is not None else (
+        lambda a, b, name=None: a @ b)
+    q = mm(x, p["wq"], name="wq").reshape(B, S, cfg.n_heads, hd)
+    k = mm(x, p["wk"], name="wk").reshape(B, S, cfg.n_kv_heads, hd)
+    v = mm(x, p["wv"], name="wv").reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v, mm
+
+
 def attention(
     p: dict, x: jax.Array, cfg, *,
     positions: jax.Array,
@@ -185,16 +204,7 @@ def attention(
     Returns (out, new_cache_kv or None)."""
     B, S, d = x.shape
     hd = cfg.head_dim
-    mm = hetero_ctx.matmul if hetero_ctx is not None else (
-        lambda a, b, name=None: a @ b)
-    q = mm(x, p["wq"], name="wq").reshape(B, S, cfg.n_heads, hd)
-    k = mm(x, p["wk"], name="wk").reshape(B, S, cfg.n_kv_heads, hd)
-    v = mm(x, p["wv"], name="wv").reshape(B, S, cfg.n_kv_heads, hd)
-    if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
-        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v, mm = _qkv_rope(p, x, cfg, positions, hetero_ctx)
 
     causal = not cfg.encoder_only
     if cache is not None and S == 1:
@@ -232,6 +242,56 @@ def attention(
         new_kv = None
     out = mm(o.reshape(B, S, cfg.n_heads * hd), p["wo"], name="wo")
     return out, new_kv
+
+
+def paged_attention(
+    p: dict, x: jax.Array, cfg, *,
+    positions: jax.Array,           # [S] or [B, S] absolute token positions
+    pool_k: jax.Array,              # [NB, BS, Hkv, D] shared page pool (layer)
+    pool_v: jax.Array,
+    block_table: jax.Array,         # [B, NBmax] int32 pool block ids (0=null)
+    unroll: bool = False,
+    hetero_ctx=None,
+):
+    """GQA attention over a paged KV pool (serving/paged_cache.py).
+
+    Logical position ``t`` of request ``b`` lives at physical slot
+    ``block_table[b, t // BS] * BS + t % BS`` of the flat pool. New K/V are
+    scattered there (``.at[idx].set`` — jittable); reads gather the
+    request's pages with ``jnp.take`` into a ``[B, NBmax*BS]`` view whose
+    slot index IS the logical position, so the standard positional causal
+    mask handles stale pool contents and null-block padding exactly like
+    the dense path masks unwritten cache slots.
+
+    Returns (out, {"k","v"}: updated pool tensors).
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    NB, BS, Hkv, D = pool_k.shape
+    q, k, v, mm = _qkv_rope(p, x, cfg, positions, hetero_ctx)
+
+    pos = (positions if positions.ndim == 2
+           else jnp.broadcast_to(positions[None, :], (B, S))).astype(jnp.int32)
+    blk = jnp.take_along_axis(block_table, pos // BS, axis=1)     # [B, S]
+    flat_idx = (blk * BS + pos % BS).reshape(-1)                  # [B*S]
+    fk = pool_k.reshape(NB * BS, Hkv, D)
+    fv = pool_v.reshape(NB * BS, Hkv, D)
+    fk = fk.at[flat_idx].set(k.reshape(B * S, Hkv, D).astype(fk.dtype))
+    fv = fv.at[flat_idx].set(v.reshape(B * S, Hkv, D).astype(fv.dtype))
+    new_pool_k = fk.reshape(NB, BS, Hkv, D)
+    new_pool_v = fv.reshape(NB, BS, Hkv, D)
+
+    NBmax = block_table.shape[1]
+    ck = jnp.take(new_pool_k, block_table, axis=0).reshape(
+        B, NBmax * BS, Hkv, D)
+    cv = jnp.take(new_pool_v, block_table, axis=0).reshape(
+        B, NBmax * BS, Hkv, D)
+    kv_pos = jnp.arange(NBmax * BS, dtype=jnp.int32)
+    o = blockwise_attention(q, ck, cv, q_pos=pos, kv_pos=kv_pos,
+                            causal=True, block_k=cfg.attn_block_k,
+                            unroll=unroll)
+    out = mm(o.reshape(B, S, cfg.n_heads * hd), p["wo"], name="wo")
+    return out, {"k": new_pool_k, "v": new_pool_v}
 
 
 # ---------------------------------------------------------------------- ffn --

@@ -30,6 +30,11 @@ class Model:
     prefill: Optional[Callable]
     decode_step: Optional[Callable]
     encode: Optional[Callable] = None
+    # paged KV cache (attention-family models only; None for SSM/RWKV whose
+    # recurrent state is O(1) and needs no paging)
+    init_paged_cache: Optional[Callable] = None
+    paged_prefill: Optional[Callable] = None
+    paged_decode_step: Optional[Callable] = None
 
 
 def build_model(cfg) -> Model:
@@ -46,9 +51,17 @@ def build_model(cfg) -> Model:
         return Model(cfg=cfg, init=init, loss=loss, init_cache=None,
                      prefill=None, decode_step=None,
                      encode=partial(transformer.forward_hidden, cfg=cfg))
+    paged = {}
+    if mod is transformer:
+        paged = dict(
+            init_paged_cache=partial(transformer.init_paged_cache, cfg),
+            paged_prefill=partial(transformer.paged_prefill, cfg=cfg),
+            paged_decode_step=partial(transformer.paged_decode_step, cfg=cfg),
+        )
     return Model(
         cfg=cfg, init=init, loss=loss,
         init_cache=partial(mod.init_cache, cfg),
         prefill=partial(mod.prefill, cfg=cfg),
         decode_step=partial(mod.decode_step, cfg=cfg),
+        **paged,
     )

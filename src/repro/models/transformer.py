@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.distributed.sharding import hidden_constraint
 
 from .layers import (attention, chunked_ce_loss, init_attention, init_swiglu,
-                     rms_norm, swiglu)
+                     paged_attention, rms_norm, swiglu)
 from .moe import init_moe, moe_ffn
 
 
@@ -50,11 +50,18 @@ def init_params(key, cfg) -> dict:
 
 
 def _layer(lp, x, cfg, *, positions, kv=None, cache_index=None, unroll=False,
-           hetero_ctx=None):
+           hetero_ctx=None, paged=None):
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
-    attn_out, new_kv = attention(lp["attn"], h, cfg, positions=positions,
-                                 cache=kv, cache_index=cache_index,
-                                 unroll=unroll, hetero_ctx=hetero_ctx)
+    if paged is not None:
+        attn_out, new_kv = paged_attention(
+            lp["attn"], h, cfg, positions=positions,
+            pool_k=paged["k"], pool_v=paged["v"],
+            block_table=paged["block_table"],
+            unroll=unroll, hetero_ctx=hetero_ctx)
+    else:
+        attn_out, new_kv = attention(lp["attn"], h, cfg, positions=positions,
+                                     cache=kv, cache_index=cache_index,
+                                     unroll=unroll, hetero_ctx=hetero_ctx)
     x = x + attn_out
     h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
     if cfg.moe:
@@ -167,6 +174,76 @@ def prefill(params, tokens, cache, cfg, *, start_index=0, unroll=False,
     logits = (x[:, -1:, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
     return logits, {"k": nkv["k"], "v": nkv["v"],
                     "index": jnp.asarray(start_index + S, jnp.int32)}
+
+
+# ------------------------------------------------------------ paged cache --
+
+def init_paged_cache(cfg, *, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Shared KV page pool: ``[L, num_blocks, block_size, Hkv, D]`` per
+    tensor. Block 0 is the null block (see serving/paged_cache.py)."""
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _run_layers_paged(params, x, cfg, *, positions, pool, block_table,
+                      unroll=False, hetero_ctx=None):
+    """Like ``_run_layers`` but attention reads/writes the paged pool;
+    scans over (layer params, per-layer pages), returns the updated pool."""
+    if unroll:
+        new_ks, new_vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, nkv, _ = _layer(lp, x, cfg, positions=positions, unroll=True,
+                               hetero_ctx=hetero_ctx,
+                               paged={"k": pool["k"][i], "v": pool["v"][i],
+                                      "block_table": block_table})
+            new_ks.append(nkv["k"]); new_vs.append(nkv["v"])
+        return x, {"k": jnp.stack(new_ks), "v": jnp.stack(new_vs)}
+
+    def step(carry, xs):
+        lp, pk, pv = xs
+        x2, nkv, _ = _layer(lp, carry, cfg, positions=positions,
+                            hetero_ctx=hetero_ctx,
+                            paged={"k": pk, "v": pv,
+                                   "block_table": block_table})
+        return x2, (nkv["k"], nkv["v"])
+
+    x, (nk, nv) = jax.lax.scan(step, x,
+                               (params["layers"], pool["k"], pool["v"]))
+    return x, {"k": nk, "v": nv}
+
+
+def paged_prefill(params, tokens, pool, cfg, *, block_table, start_index=0,
+                  unroll=False, hetero_ctx=None):
+    """Prefill a prompt chunk into the request's pages. tokens: [B, S];
+    block_table: [B, NBmax]. Returns (last-token logits, updated pool)."""
+    S = tokens.shape[1]
+    x = _embed(params, tokens, cfg)
+    positions = start_index + jnp.arange(S, dtype=jnp.int32)
+    x, pool = _run_layers_paged(params, x, cfg, positions=positions,
+                                pool=pool, block_table=block_table,
+                                unroll=unroll, hetero_ctx=hetero_ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1:, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    return logits, pool
+
+
+def paged_decode_step(params, token, pool, cfg, *, block_tables, lengths,
+                      unroll=False, hetero_ctx=None):
+    """One batched decode step over the page pool. token: [B, 1];
+    block_tables: [B, NBmax]; lengths: [B] per-request write positions.
+    Inactive lanes (length 0, null table) sink writes into the null block.
+    Returns (logits [B, 1, V], updated pool)."""
+    x = _embed(params, token, cfg)
+    positions = lengths[:, None].astype(jnp.int32)
+    x, pool = _run_layers_paged(params, x, cfg, positions=positions,
+                                pool=pool, block_table=block_tables,
+                                unroll=unroll, hetero_ctx=hetero_ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ _head_matrix(params, cfg)).astype(jnp.float32)
+    return logits, pool
 
 
 def decode_step(params, token, cache, cfg, *, unroll=False, hetero_ctx=None):

@@ -1,0 +1,170 @@
+"""Paged (block-table) KV cache: vLLM-style paging for the serving stack.
+
+The paper's §3/§4.2 observation — unified-memory mobile SoCs are bound by
+memory capacity and bandwidth, not compute — makes KV memory the scaling
+lever for multi-request serving. The dense continuous batcher preallocates
+``[max_batch, max_len]`` per slot, so one long request reserves worst-case
+memory and concurrency is capped at ``max_batch`` regardless of actual
+lengths. Here the cache is a shared pool of fixed-size token blocks:
+
+  * pool tensors ``k``/``v``: ``[L, num_blocks, block_size, Hkv, D]``;
+  * a host-side free-list :class:`BlockAllocator` hands blocks to requests;
+  * each request owns a **block table** (``[max_blocks_per_seq]`` int32 of
+    pool block ids) mapping logical token position ``t`` to physical slot
+    ``table[t // block_size] * block_size + t % block_size``;
+  * device reads gather pages with ``jnp.take`` and writes scatter through
+    flat ``.at[idx].set`` — both fully jittable, so batched decode stays a
+    single compiled graph.
+
+Block id 0 is reserved as the **null block**: unused table entries point at
+it, so gathers are always in-bounds (garbage there is masked positionally by
+the causal mask, exactly how the dense path masks unwritten slots) and
+inactive decode lanes harmlessly sink their writes into it.
+
+Allocator invariants (asserted):
+  * block 0 is never handed out and never freed;
+  * a block is owned by at most one request at a time;
+  * ``free + outstanding == num_blocks - 1`` at all times.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfBlocks(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+class BlockAllocator:
+    """Free-list allocator over pool blocks ``1..num_blocks-1`` (0 = null)."""
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, "need at least one allocatable block"
+        self.num_blocks = num_blocks
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
+        self._owned: set[int] = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise OutOfBlocks(f"requested {n} blocks, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._owned.update(out)
+        return out
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            assert b != 0, "null block must never be freed"
+            assert b in self._owned, f"double free of block {b}"
+            self._owned.remove(b)
+            self._free.append(b)
+
+    def check(self) -> None:
+        assert len(self._free) + len(self._owned) == self.num_blocks - 1
+        assert 0 not in self._owned and 0 not in self._free
+
+
+@dataclass
+class SequenceBlocks:
+    """One request's view of the pool: its block table and write cursor."""
+    table: np.ndarray                  # [max_blocks_per_seq] int32, 0-padded
+    blocks: list = field(default_factory=list)   # allocated pool block ids
+    length: int = 0                    # tokens written so far
+    reserved: int = 0                  # blocks admission promised (incl. held)
+
+    def append_block(self, block_id: int) -> None:
+        self.table[len(self.blocks)] = block_id
+        self.blocks.append(block_id)
+
+
+class PagedKVCache:
+    """Shared KV pool + allocator + per-request block tables.
+
+    The device arrays live in ``self.pool`` (``{"k","v"}``, each
+    ``[L, num_blocks, block_size, Hkv, D]``); scheduler code threads that
+    dict through the jitted paged prefill/decode functions and stores the
+    donated result back.
+    """
+
+    def __init__(self, cfg, *, num_blocks: int, block_size: int = 32,
+                 max_blocks_per_seq: int | None = None, dtype=jnp.bfloat16):
+        from repro.models import transformer
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_blocks_per_seq = (max_blocks_per_seq
+                                   if max_blocks_per_seq is not None
+                                   else num_blocks - 1)
+        self.pool = transformer.init_paged_cache(
+            cfg, num_blocks=num_blocks, block_size=block_size, dtype=dtype)
+        self.allocator = BlockAllocator(num_blocks)
+        self._reserved_unheld = 0      # promised at admission, not yet alloc'd
+
+    # ------------------------------------------------------------- sizing --
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(max(n_tokens, 1) / self.block_size)
+
+    @property
+    def n_free_unreserved(self) -> int:
+        """Blocks available to NEW admissions (free minus outstanding IOUs)."""
+        return self.allocator.n_free - self._reserved_unheld
+
+    def can_admit(self, n_tokens: int) -> bool:
+        need = self.blocks_for(n_tokens)
+        return (need <= self.max_blocks_per_seq
+                and need <= self.n_free_unreserved)
+
+    # ---------------------------------------------------------- lifecycle --
+    def open_sequence(self, prompt_tokens: int, total_tokens: int
+                      ) -> SequenceBlocks:
+        """Admit a request: allocate prompt blocks now, reserve the rest so
+        decode-time growth (`maybe_grow`) can never fail mid-flight."""
+        need = self.blocks_for(total_tokens)
+        now = self.blocks_for(prompt_tokens)
+        if need > self.n_free_unreserved or need > self.max_blocks_per_seq:
+            raise OutOfBlocks(f"need {need} blocks, "
+                              f"{self.n_free_unreserved} unreserved")
+        seq = SequenceBlocks(
+            table=np.zeros((self.max_blocks_per_seq,), np.int32),
+            reserved=need)
+        for b in self.allocator.alloc(now):
+            seq.append_block(b)
+        self._reserved_unheld += need - now
+        return seq
+
+    def maybe_grow(self, seq: SequenceBlocks) -> bool:
+        """Before a decode step writing position ``seq.length``: allocate the
+        next block if the write crosses a block boundary. Draws on the
+        request's admission-time reservation, so it cannot fail. Returns
+        True if a block was allocated (block-granularity backfill signal)."""
+        if seq.length < len(seq.blocks) * self.block_size:
+            return False
+        assert len(seq.blocks) < seq.reserved, "grew past reservation"
+        seq.append_block(self.allocator.alloc(1)[0])
+        self._reserved_unheld -= 1
+        return True
+
+    def close_sequence(self, seq: SequenceBlocks) -> None:
+        self.allocator.free(seq.blocks)
+        self._reserved_unheld -= seq.reserved - len(seq.blocks)
+        seq.blocks = []
+        seq.reserved = 0
+        seq.table[:] = 0
+        self.allocator.check()
+
+    # ------------------------------------------------------------- stats --
+    def memory_tokens(self) -> int:
+        """Total token capacity of the pool (for equal-memory comparisons);
+        the null block is real memory, so it counts."""
+        return self.num_blocks * self.block_size
+
+    def utilization(self) -> float:
+        held = self.num_blocks - 1 - self.allocator.n_free
+        return held / max(self.num_blocks - 1, 1)

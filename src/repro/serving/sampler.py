@@ -14,10 +14,10 @@ class SamplerConfig:
     top_p: float = 1.0            # 1 => off
 
 
-def sample(logits: jax.Array, rng, cfg: SamplerConfig) -> jax.Array:
-    """logits [B, V] -> tokens [B] int32."""
-    if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def filter_logits(logits: jax.Array, cfg: SamplerConfig) -> jax.Array:
+    """Temperature-scale then mask logits outside the top-k / top-p support
+    to -inf. logits [B, V] -> [B, V]. Applied before categorical sampling;
+    split out so tests can assert the support sets directly."""
     logits = logits / cfg.temperature
     if cfg.top_k:
         kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
@@ -29,4 +29,12 @@ def sample(logits: jax.Array, rng, cfg: SamplerConfig) -> jax.Array:
         cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+    return logits
+
+
+def sample(logits: jax.Array, rng, cfg: SamplerConfig) -> jax.Array:
+    """logits [B, V] -> tokens [B] int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, filter_logits(logits, cfg),
+                                  axis=-1).astype(jnp.int32)

@@ -1,12 +1,19 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching serving schedulers: dense slots and paged blocks.
 
-Slot-based continuous batching over a shared KV cache: requests join free
-slots, prefill runs per-request as bucket-chunked pieces (the engine's
-activation-centric strategy applied at the scheduler level — aligned chunks
-take the static fast path, the ragged tail takes the flexible path), decode
-steps run batched across all active slots with PER-SLOT cache indices.
-Finished slots free immediately and the queue backfills (orca-style
-iteration-level scheduling, sized for mobile-to-pod deployments).
+``ContinuousBatcher`` (the dense baseline) runs slot-based continuous
+batching over a preallocated ``[max_batch, max_len]`` KV cache: requests
+join free slots, prefill runs per-request as bucket-chunked pieces (the
+engine's activation-centric strategy applied at the scheduler level),
+decode steps run batched across all active slots with PER-SLOT cache
+indices. Finished slots free immediately and the queue backfills
+(orca-style iteration-level scheduling).
+
+``PagedBatcher`` rebases the same loop on the paged KV pool
+(serving/paged_cache.py): admission is gated by FREE BLOCKS rather than
+fixed slots, so many short requests can share the memory one long request
+used to reserve under the dense scheme, and the queue backfills at block
+granularity — the KV-capacity lever the paper's unified-memory analysis
+(§3, §4.2) identifies as the mobile serving bottleneck.
 """
 from __future__ import annotations
 
@@ -20,7 +27,22 @@ import numpy as np
 
 from repro.models import build_model
 
+from .paged_cache import PagedKVCache, SequenceBlocks
 from .sampler import SamplerConfig, sample
+
+
+def bucket_chunks(S: int, buckets: tuple) -> list[int]:
+    """Greedy bucket decomposition of a prompt length: aligned chunks take
+    the static fast path, the ragged tail takes the flexible path. Shared
+    by the dense and paged batchers so both chunk prefill identically."""
+    chunks, rem = [], S
+    for bk in sorted(buckets, reverse=True):
+        while rem >= bk:
+            chunks.append(bk)
+            rem -= bk
+    if rem:
+        chunks.append(rem)
+    return chunks
 
 
 @dataclass
@@ -52,6 +74,7 @@ class ContinuousBatcher:
         self.queue: list[Request] = []
         self.budget: list[int] = [0] * max_batch
         self.lengths: list[int] = [0] * max_batch   # python-side slot lengths
+        self.peak_active = 0           # max concurrent requests observed
 
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
         self._prefill_piece = jax.jit(self._prefill_piece_impl,
@@ -84,16 +107,8 @@ class ContinuousBatcher:
                 req = self.queue.pop(0)
                 self.slots[b] = req
                 S = len(req.prompt)
-                # bucket-chunked prefill (aligned chunks + ragged tail)
-                chunks, rem, idx = [], S, 0
-                for bk in sorted(self.buckets, reverse=True):
-                    while rem >= bk:
-                        chunks.append(bk)
-                        rem -= bk
-                if rem:
-                    chunks.append(rem)
-                logits = None
-                for c in chunks:
+                logits, idx = None, 0
+                for c in bucket_chunks(S, self.buckets):
                     piece = jnp.asarray(req.prompt[idx: idx + c], jnp.int32)
                     logits, self.cache = self._prefill_piece(
                         self.params, self.cache, piece,
@@ -105,12 +120,17 @@ class ContinuousBatcher:
                 first = int(sample(logits[:, -1, :], k, self.sampler)[0])
                 req.output.append(first)
                 self.budget[b] = req.max_new_tokens - 1
+                if self.budget[b] <= 0:     # satisfied at prefill: don't
+                    req.done = True         # overproduce a decode token
+                    self.slots[b] = None
+                    self.lengths[b] = 0
 
     # ----------------------------------------------------------------- run --
     def step(self):
         """One scheduler tick: admit waiting requests, one batched decode."""
         self._admit()
         active = [b for b in range(self.B) if self.slots[b] is not None]
+        self.peak_active = max(self.peak_active, len(active))
         if not active:
             return False
         last = np.zeros((self.B, 1), np.int32)
@@ -137,6 +157,158 @@ class ContinuousBatcher:
             self.submit(r)
         ticks = 0
         while (self.queue or any(s is not None for s in self.slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return requests
+
+
+# --------------------------------------------------------------- paged ------
+
+@dataclass
+class _PagedLane:
+    """One decode lane: the request plus its pool bookkeeping."""
+    req: Request
+    seq: SequenceBlocks
+    budget: int = 0
+
+
+class PagedBatcher:
+    """Continuous batching over the paged KV pool.
+
+    Admission is by free blocks: a request is admitted when
+    ``ceil((len(prompt) + max_new_tokens) / block_size)`` blocks can be
+    reserved, regardless of how many other requests are in flight (up to
+    ``decode_width`` compiled decode lanes). Prompt blocks are allocated at
+    admission; generation blocks are allocated lazily as decode crosses
+    block boundaries (drawing on the admission-time reservation, so growth
+    never fails mid-flight). Finished requests return their blocks and the
+    queue backfills immediately.
+
+    Decode runs as ONE jitted graph of static width ``decode_width``:
+    inactive lanes carry a null block table and length 0, sinking their
+    writes into the pool's null block.
+    """
+
+    def __init__(self, cfg, params=None, *, num_blocks: int = 65,
+                 block_size: int = 32, max_blocks_per_seq: int | None = None,
+                 decode_width: int = 8, buckets=(64, 128, 256),
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
+                 cache_dtype=None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        if self.model.paged_decode_step is None:
+            raise ValueError(f"{cfg.name}: paged KV cache requires an "
+                             "attention-family model")
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(seed))
+        self.block_size = block_size
+        self.kv = PagedKVCache(
+            cfg, num_blocks=num_blocks, block_size=block_size,
+            max_blocks_per_seq=max_blocks_per_seq,
+            dtype=(cache_dtype if cache_dtype is not None
+                   else jnp.dtype(cfg.compute_dtype)))
+        self.W = decode_width
+        self.buckets = tuple(sorted(buckets))
+        self.sampler = sampler
+        self.rng = jax.random.PRNGKey(seed)
+        self.lanes: list[Optional[_PagedLane]] = [None] * decode_width
+        self.queue: list[Request] = []
+        self.peak_active = 0
+
+        self._prefill = jax.jit(self.model.paged_prefill, donate_argnums=(2,))
+        self._decode = jax.jit(self.model.paged_decode_step,
+                               donate_argnums=(2,))
+
+    # ------------------------------------------------------------ plumbing --
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for lane in range(self.W):
+            if self.lanes[lane] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            S = len(req.prompt)
+            total = S + req.max_new_tokens   # generation headroom, see step()
+            need = self.kv.blocks_for(total)
+            if need > min(self.kv.max_blocks_per_seq, self.kv.num_blocks - 1):
+                raise ValueError(
+                    f"request {req.rid} needs {need} blocks "
+                    f"({total} tokens @ block_size={self.block_size}) but the "
+                    f"pool can never supply more than "
+                    f"{min(self.kv.max_blocks_per_seq, self.kv.num_blocks - 1)}"
+                    " per request — raise num_blocks/max_blocks_per_seq")
+            if not self.kv.can_admit(total):
+                break                        # FCFS: wait for blocks to free
+            self.queue.pop(0)
+            seq = self.kv.open_sequence(prompt_tokens=S, total_tokens=total)
+            bt = jnp.asarray(seq.table)[None]
+            idx, logits = 0, None
+            for c in bucket_chunks(S, self.buckets):
+                piece = jnp.asarray(req.prompt[idx: idx + c], jnp.int32)
+                logits, self.kv.pool = self._prefill(
+                    self.params, piece[None], self.kv.pool, block_table=bt,
+                    start_index=jnp.asarray(idx, jnp.int32))
+                idx += c
+            seq.length = S
+            self.rng, k = jax.random.split(self.rng)
+            first = int(sample(logits[:, -1, :], k, self.sampler)[0])
+            req.output.append(first)
+            self.lanes[lane] = _PagedLane(req=req, seq=seq,
+                                          budget=req.max_new_tokens - 1)
+
+    def _finish(self, lane: int):
+        st = self.lanes[lane]
+        st.req.done = True
+        self.kv.close_sequence(st.seq)
+        self.lanes[lane] = None
+
+    # ----------------------------------------------------------------- run --
+    def step(self):
+        """One tick: admit by free blocks, one batched paged decode."""
+        self._admit()
+        active = [i for i in range(self.W) if self.lanes[i] is not None]
+        self.peak_active = max(self.peak_active, len(active))
+        if not active:
+            return False
+        # zero-budget admissions (max_new_tokens == 1) finish at prefill
+        for i in list(active):
+            if self.lanes[i].budget <= 0:
+                self._finish(i)
+                active.remove(i)
+        if not active:
+            return False
+
+        tables = np.zeros((self.W, self.kv.max_blocks_per_seq), np.int32)
+        lengths = np.zeros((self.W,), np.int32)
+        last = np.zeros((self.W, 1), np.int32)
+        for i in active:
+            st = self.lanes[i]
+            self.kv.maybe_grow(st.seq)   # next write may cross a boundary
+            tables[i] = st.seq.table
+            lengths[i] = st.seq.length
+            last[i, 0] = st.req.output[-1]
+        logits, self.kv.pool = self._decode(
+            self.params, jnp.asarray(last), self.kv.pool,
+            block_tables=jnp.asarray(tables),
+            lengths=jnp.asarray(lengths))
+        self.rng, k = jax.random.split(self.rng)
+        toks = np.asarray(sample(logits[:, -1, :], k, self.sampler))
+        for i in active:
+            st = self.lanes[i]
+            st.req.output.append(int(toks[i]))
+            st.seq.length += 1
+            st.budget -= 1
+            if st.budget <= 0:
+                self._finish(i)
+        return True
+
+    def run(self, requests: list[Request], max_ticks: int = 10_000):
+        for r in requests:
+            self.submit(r)
+        ticks = 0
+        while (self.queue or any(s is not None for s in self.lanes)) \
                 and ticks < max_ticks:
             self.step()
             ticks += 1

@@ -1,7 +1,13 @@
-"""Blockwise attention + chunked recurrences vs oracles (property-based)."""
+"""Blockwise attention + chunked recurrences vs oracles (seeded sweeps).
+
+Formerly hypothesis property tests; rewritten as seeded ``numpy.random``
+parameterizations so the suite collects on a clean environment with no
+third-party test deps.
+"""
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import numpy as np
+import pytest
 
 from repro.models.layers import blockwise_attention, dense_attention
 from repro.models.mamba2 import ssd_chunked
@@ -10,9 +16,28 @@ from repro.models.rwkv6 import wkv6_chunked, wkv6_recurrent
 RNG = jax.random.PRNGKey(1)
 
 
-@settings(max_examples=8, deadline=None)
-@given(sq=st.integers(1, 40), sk=st.integers(8, 64), g=st.sampled_from([1, 2, 4]),
-       block=st.sampled_from([8, 16, 32]), causal=st.booleans())
+def _sampled_cases(seed, n, sampler):
+    rng = np.random.default_rng(seed)
+    return [sampler(rng) for _ in range(n)]
+
+
+# decode-style and prefill-style shapes, ragged vs aligned block boundaries
+BLOCKWISE_CASES = [
+    # (sq, sk, g, block, causal)
+    (1, 64, 4, 16, True),        # decode step, GQA
+    (1, 8, 1, 8, True),          # single block exactly
+    (40, 40, 2, 16, True),       # prefill, ragged tail (40 % 16 != 0)
+    (17, 33, 1, 32, True),       # both ragged
+    (8, 64, 4, 8, False),        # bidirectional (encoder)
+    (40, 64, 2, 32, False),
+] + _sampled_cases(7, 4, lambda r: (int(r.integers(1, 41)),
+                                    int(r.integers(8, 65)),
+                                    int(r.choice([1, 2, 4])),
+                                    int(r.choice([8, 16, 32])),
+                                    bool(r.integers(2))))
+
+
+@pytest.mark.parametrize("sq,sk,g,block,causal", BLOCKWISE_CASES)
 def test_blockwise_matches_dense(sq, sk, g, block, causal):
     Hkv, D = 2, 16
     ks = jax.random.split(RNG, 3)
@@ -28,8 +53,10 @@ def test_blockwise_matches_dense(sq, sk, g, block, causal):
     assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-5
 
 
-@settings(max_examples=6, deadline=None)
-@given(S=st.integers(4, 100), chunk=st.sampled_from([8, 16, 32]))
+WKV_CASES = [(4, 8), (37, 16), (100, 32), (64, 16), (31, 8), (16, 16)]
+
+
+@pytest.mark.parametrize("S,chunk", WKV_CASES)
 def test_wkv6_chunked_matches_recurrent(S, chunk):
     B, H, hd = 2, 2, 8
     ks = jax.random.split(RNG, 5)
@@ -44,8 +71,10 @@ def test_wkv6_chunked_matches_recurrent(S, chunk):
     assert float(jnp.max(jnp.abs(s1 - s2))) < 1e-4
 
 
-@settings(max_examples=6, deadline=None)
-@given(S=st.integers(4, 80), chunk=st.sampled_from([8, 16, 32]))
+SSD_CASES = [(4, 8), (29, 16), (80, 32), (48, 16), (33, 8)]
+
+
+@pytest.mark.parametrize("S,chunk", SSD_CASES)
 def test_ssd_chunked_matches_recurrence(S, chunk):
     B, nh, hd, N = 2, 3, 8, 8
     ks = jax.random.split(RNG, 5)

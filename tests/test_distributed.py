@@ -13,6 +13,7 @@ from repro.distributed.compression import (compress_grads_with_feedback,
                                            compressed_psum, init_error)
 from repro.distributed.sharding import (batch_sharding, cache_specs,
                                         param_specs, sanitize_spec)
+from repro.distributed.compat import set_mesh, shard_map
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_step_and_specs
 from repro.models import build_model
@@ -63,7 +64,7 @@ def test_small_mesh_compile(arch, shape_name):
     if not ok:
         pytest.skip("unsupported cell")
     mesh = small_mesh()
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         jf, args, act_spec = make_step_and_specs(cfg, mesh, shape)
         with activation_sharding(act_spec):
             compiled = jf.lower(*args).compile()
@@ -82,7 +83,7 @@ def test_pipeline_parallel_matches_serial():
         return jnp.tanh(h @ w[0])
 
     pipe = make_pipeline_forward(layer_fn, n_stages, n_micro, mesh)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         y = pipe(Ws, x)
     ref = x
     for s in range(n_stages):
@@ -111,10 +112,10 @@ def test_compressed_psum_close_to_exact():
 
     @jax.jit
     def f(x):
-        return jax.shard_map(lambda xs: compressed_psum(xs, "d"),
+        return shard_map(lambda xs: compressed_psum(xs, "d"),
                              mesh=mesh, in_specs=P("d"),
                              out_specs=P("d"))(x)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         y = f(x)
     exact = jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
     rel = float(jnp.max(jnp.abs(y - exact)) / (jnp.max(jnp.abs(exact)) + 1e-9))
@@ -135,7 +136,7 @@ def test_split_kv_decode_matches_oracle():
     vc = jax.random.normal(ks[4], (B, Smax, Hkv, D), jnp.float32)
     for pos in (0, 15, 16, 37, 63):      # includes shard boundaries
         idx = jnp.asarray(pos, jnp.int32)
-        with jax.sharding.set_mesh(mesh):
+        with set_mesh(mesh):
             out, ck, cv = jax.jit(split_kv_decode_update_attend)(
                 q, kn, vn, kc, vc, idx)
         kc2 = kc.at[:, pos].set(kn[:, 0])

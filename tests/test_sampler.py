@@ -1,0 +1,101 @@
+"""Sampler unit tests: greedy/temperature equivalence, top-k masking,
+top-p (nucleus) cutoff properties. All seeded, no sampling statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import SamplerConfig, filter_logits, sample
+
+RNG = jax.random.PRNGKey(3)
+
+
+def _logits(seed, b=4, v=64):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, v))
+
+
+# ------------------------------------------------------------------ greedy --
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_greedy_is_argmax(seed):
+    """temperature == 0 must reduce to deterministic argmax, independent of
+    the rng key and of top-k/top-p settings."""
+    logits = _logits(seed)
+    for key in (RNG, jax.random.PRNGKey(seed + 100)):
+        t = sample(logits, key, SamplerConfig(temperature=0.0, top_k=5,
+                                              top_p=0.5))
+        assert (t == jnp.argmax(logits, -1)).all()
+
+
+def test_low_temperature_converges_to_greedy():
+    """As T -> 0+, categorical sampling concentrates on the argmax."""
+    logits = _logits(7)
+    t = sample(logits, RNG, SamplerConfig(temperature=1e-4))
+    assert (t == jnp.argmax(logits, -1)).all()
+
+
+# ------------------------------------------------------------------- top-k --
+
+@pytest.mark.parametrize("k", [1, 3, 7, 20, 64])
+def test_topk_mask_keeps_exactly_topk(k):
+    logits = _logits(11)
+    out = filter_logits(logits, SamplerConfig(temperature=1.0, top_k=k))
+    finite = jnp.isfinite(out)
+    assert (finite.sum(-1) == k).all()        # exactly k survivors (no ties
+    # in continuous random logits)
+    top = jnp.argsort(logits, -1)[:, -k:]
+    for b in range(logits.shape[0]):
+        assert set(np.where(np.asarray(finite[b]))[0]) == set(np.asarray(top[b]))
+
+
+def test_topk_one_is_greedy():
+    logits = _logits(13)
+    t = sample(logits, RNG, SamplerConfig(temperature=1.0, top_k=1))
+    assert (t == jnp.argmax(logits, -1)).all()
+
+
+@pytest.mark.parametrize("k,seed", [(2, 5), (5, 17), (10, 23)])
+def test_topk_sampled_token_in_support(k, seed):
+    logits = _logits(seed, b=2)
+    t = sample(logits, jax.random.PRNGKey(seed + 1),
+               SamplerConfig(temperature=1.0, top_k=k))
+    top = jnp.argsort(logits, -1)[:, -k:]
+    for b in range(2):
+        assert int(t[b]) in np.asarray(top[b])
+
+
+# ------------------------------------------------------------------- top-p --
+
+def _support(logits, p):
+    out = filter_logits(logits, SamplerConfig(temperature=1.0, top_p=p))
+    return [frozenset(np.where(np.isfinite(np.asarray(out[b])))[0])
+            for b in range(logits.shape[0])]
+
+
+def test_topp_cutoff_monotonic():
+    """Nucleus support grows monotonically with p (cutoff monotonicity)."""
+    logits = _logits(29)
+    supports = [_support(logits, p) for p in (0.1, 0.3, 0.5, 0.7, 0.9, 0.999)]
+    for lo, hi in zip(supports, supports[1:]):
+        for b in range(logits.shape[0]):
+            assert lo[b] <= hi[b]      # subset at every row
+
+
+def test_topp_support_mass_and_minimality():
+    """Kept mass >= p, always includes the argmax, and the nucleus is
+    minimal: dropping its least-likely member would fall below p."""
+    logits = _logits(31)
+    probs = np.asarray(jax.nn.softmax(logits, -1))
+    for p in (0.25, 0.5, 0.8):
+        for b, sup in enumerate(_support(logits, p)):
+            idx = sorted(sup, key=lambda i: probs[b, i])
+            mass = probs[b, list(sup)].sum()
+            assert mass >= p - 1e-6
+            assert int(np.argmax(probs[b])) in sup
+            assert mass - probs[b, idx[0]] < p   # minimality
+
+
+def test_topp_one_keeps_everything():
+    logits = _logits(37)
+    out = filter_logits(logits, SamplerConfig(temperature=1.0, top_p=1.0))
+    assert jnp.isfinite(out).all()

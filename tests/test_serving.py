@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
 from repro.core.engine import InferenceEngine
@@ -59,8 +58,8 @@ def test_sampler_greedy_is_argmax():
     assert (t == jnp.argmax(logits, -1)).all()
 
 
-@settings(max_examples=5, deadline=None)
-@given(k=st.integers(1, 20), seed=st.integers(0, 1000))
+@pytest.mark.parametrize("k,seed", [(1, 0), (3, 11), (7, 42), (13, 7),
+                                    (20, 999)])
 def test_sampler_topk_support(k, seed):
     logits = jax.random.normal(jax.random.PRNGKey(seed), (2, 64))
     t = sample(logits, jax.random.PRNGKey(seed + 1),
