@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.bench_ablation",          # Fig 18
     "benchmarks.bench_e2e",               # Fig 12 + Table 4
     "benchmarks.bench_paged",             # paged vs dense KV at equal memory
+    "benchmarks.bench_serve_sync",        # host-synced vs fused-window decode
     "benchmarks.roofline_report",         # §Roofline
 ]
 

@@ -1,0 +1,78 @@
+"""Hetero-mode paged serving, end to end: solver-planned prefill + fused-
+window (fast-sync) decode over the paged KV pool.
+
+    PYTHONPATH=src python examples/hetero_serve.py --requests 6
+
+Admission-time prefill routes every matmul (including the LM head) through
+the HeteroCtx whose PartitionSolver plan was solved offline for this model
+(paper §4.1/§4.2); decode runs as fused on-device windows — ONE host
+dispatch per `--window` decode steps instead of one per token (§4.3, the
+clFinish problem at serving widths). The host-synced dense-prefill arm runs
+for comparison: identical greedy tokens, ~window-times fewer dispatches.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=17)
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--engine-mode", default="hetero-tensor",
+                    choices=["xla", "mxu", "hetero-layer", "hetero-tensor"])
+    args = ap.parse_args()
+
+    from repro.configs import get_smoke_config
+    from repro.serving.scheduler import PagedBatcher, Request
+
+    cfg = get_smoke_config(args.arch)
+    max_len = 200 + args.new_tokens
+
+    def requests():
+        r = np.random.default_rng(1)
+        return [Request(rid=i,
+                        prompt=r.integers(0, cfg.vocab_size,
+                                          int(r.integers(16, 200))
+                                          ).astype(np.int32),
+                        max_new_tokens=args.new_tokens)
+                for i in range(args.requests)]
+
+    def serve(label, **kw):
+        pb = PagedBatcher(cfg,
+                          num_blocks=1 + args.requests * -(-max_len // 32),
+                          block_size=32, max_blocks_per_seq=-(-max_len // 32),
+                          decode_width=args.requests, buckets=(32, 64, 128),
+                          **kw)
+        reqs = requests()
+        t0 = time.perf_counter()
+        pb.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in reqs)
+        print(f"{label}: {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s); "
+              f"decode: {pb.decode_dispatches} host dispatches for "
+              f"{pb.decode_steps} tokens "
+              f"({pb.decode_steps/max(pb.decode_dispatches,1):.1f} "
+              f"tokens/dispatch)")
+        return reqs
+
+    print(f"== {cfg.name}: {args.requests} requests, "
+          f"{args.new_tokens} new tokens each ==")
+    base = serve("host-synced baseline      ", sync="host")
+    fused = serve(f"hetero + window={args.window} fused ", sync="device",
+                  window=args.window, engine_mode=args.engine_mode)
+    match = all(b.output == f.output for b, f in zip(base, fused))
+    print(f"greedy outputs identical across arms: {match}")
+    assert match, "hetero/fused arm diverged from the baseline"
+    for r in fused[:2]:
+        print(f"  req{r.rid} prompt_len={len(r.prompt)} -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

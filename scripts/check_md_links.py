@@ -1,0 +1,52 @@
+"""Fail on broken intra-repo Markdown links (the CI docs job).
+
+Walks every tracked ``*.md`` file, extracts ``[text](target)`` links, and
+checks that each relative (non-http, non-anchor) target exists on disk,
+resolved against the linking file's directory. External URLs and pure
+``#anchor`` links are skipped.
+
+    python scripts/check_md_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SKIP_DIRS = {".git", "artifacts", "__pycache__", ".pytest_cache"}
+# [text](target) — target up to the first unescaped ')' or whitespace
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files() -> list[Path]:
+    return [p for p in sorted(ROOT.rglob("*.md"))
+            if not SKIP_DIRS.intersection(p.relative_to(ROOT).parts)]
+
+
+def main() -> int:
+    broken: list[str] = []
+    n_links = 0
+    for md in md_files():
+        for m in LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#")[0]
+            if not path:
+                continue
+            n_links += 1
+            if not (md.parent / path).exists():
+                broken.append(f"{md.relative_to(ROOT)} -> {target}")
+    if broken:
+        print(f"{len(broken)} broken intra-repo markdown link(s):")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"markdown links OK ({n_links} intra-repo links across "
+          f"{len(md_files())} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,25 @@ from .solver import PartitionSolver, PartitionPlan
 from .sync import generate_host_loop, generate_on_device
 
 
+def build_plan(cfg, *, sync_mode: str = "fast",
+               table: Optional[LatencyTable] = None
+               ) -> tuple[LatencyTable, PartitionPlan]:
+    """Offline phase (paper Fig 11 left half): profile the model's weight
+    shapes, then solve the per-(site, M) partitioning decisions. Shared by
+    the single-stream engine and the paged serving scheduler so both run
+    the SAME solver-planned execution."""
+    table = table or profile_analytic(cfg)
+    return table, PartitionSolver(table, sync_mode=sync_mode).solve(cfg)
+
+
+def build_hetero_ctx(cfg, mode: str, *, sync_mode: str = "fast",
+                     interpret: bool = True) -> HeteroCtx:
+    """Profile + solve + wrap in the HeteroCtx that models thread through
+    every matmul site (including the LM head)."""
+    _, plan = build_plan(cfg, sync_mode=sync_mode)
+    return HeteroCtx(mode=mode, plan=plan, interpret=interpret)
+
+
 @dataclass
 class EngineStats:
     prefill_s: float = 0.0
@@ -70,9 +89,11 @@ class InferenceEngine:
         self.fast_sync = fast_sync
         self.buckets = tuple(sorted(buckets))
         self.max_len = max_len
-        self.table = table or profile_analytic(cfg)
-        self.plan = plan or PartitionSolver(
-            self.table, sync_mode="fast" if fast_sync else "host").solve(cfg)
+        if plan is None:
+            self.table, self.plan = build_plan(
+                cfg, sync_mode="fast" if fast_sync else "host", table=table)
+        else:
+            self.table, self.plan = table or profile_analytic(cfg), plan
         # use_kernels: route MXU-path matmuls through the Pallas kernel
         # (interpret mode on CPU — functional; CPU wall-times of the MXU
         # path are NOT representative of silicon, the analytic arms are).

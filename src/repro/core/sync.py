@@ -11,6 +11,14 @@ the whole loop on device:
   * ``generate_host_loop``  — the baseline: one jitted decode_step per token,
     host-synced each step (the clFinish analogue). ``hard_sync=True`` adds a
     device->host token fetch per step (the worst case the paper measures).
+  * ``paged_decode_window`` — the paged-serving analogue: one jitted scan
+    running a fixed WINDOW of batched paged decode steps per dispatch
+    (scatter cache writes inside the scan, donated pool buffers), so the
+    scheduler pays one host round-trip per window instead of per token.
+    Mid-window termination (per-lane token budget or EOS) is handled by
+    masking: a finished lane's block table is swapped to the null table and
+    its length to 0, so its writes sink into the pool's null block exactly
+    like an inactive lane.
 
 ``measure_dispatch_overhead`` quantifies the per-dispatch cost on the current
 backend — the number the solver uses as T_sync in 'host' mode.
@@ -45,6 +53,61 @@ def generate_on_device(model, params, first_token, cache, n_steps: int):
     """Fast-sync path: the entire decode loop is one device program."""
     return _device_loop(params, first_token, cache,
                         decode_step=model.decode_step, n_steps=n_steps)
+
+
+@partial(jax.jit,
+         static_argnames=("decode_step", "n_steps", "sampler", "eos_id"),
+         donate_argnums=(2,))
+def _paged_window(params, token, pool, block_tables, lengths, remaining,
+                  step_keys, *, decode_step, n_steps: int, sampler, eos_id):
+    def step(carry, key):
+        token, pool, lengths, remaining = carry
+        active = remaining > 0
+        # finished/inactive lanes: null block table + length 0 sinks their
+        # write into the null block and keeps the step fully batched
+        eff_tables = jnp.where(active[:, None], block_tables, 0)
+        eff_lengths = jnp.where(active, lengths, 0)
+        logits, pool = decode_step(params, token, pool,
+                                   block_tables=eff_tables,
+                                   lengths=eff_lengths)
+        if sampler is None or sampler.temperature <= 0.0:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        else:
+            # deferred: keeps core free of a top-level serving dependency
+            from repro.serving.sampler import sample
+            nxt = sample(logits[:, -1, :], key, sampler)
+        nxt = jnp.where(active, nxt, token[:, 0])
+        new_remaining = jnp.where(active, remaining - 1, 0)
+        if eos_id is not None:
+            new_remaining = jnp.where(active & (nxt == eos_id), 0,
+                                      new_remaining)
+        new_lengths = lengths + active.astype(jnp.int32)
+        return (nxt[:, None], pool, new_lengths, new_remaining), (nxt, active)
+
+    (token, pool, lengths, remaining), (toks, valid) = jax.lax.scan(
+        step, (token, pool, lengths, remaining), step_keys, length=n_steps)
+    return toks.T, valid.T, pool, lengths, remaining
+
+
+def paged_decode_window(model, params, last_token, pool, block_tables,
+                        lengths, remaining, rng, n_steps: int, *,
+                        sampler=None, eos_id=None):
+    """Fused-window paged decode: ONE dispatch for ``n_steps`` batched steps.
+
+    last_token: [W, 1] each lane's most recent token; block_tables: [W, NBmax]
+    (pre-grown on the host to cover the whole window's writes); lengths: [W]
+    write positions; remaining: [W] per-lane steps still to emit (0 = lane
+    inactive for the whole window). Greedy when ``sampler`` is None or
+    temperature 0; otherwise one fold of ``rng`` per step.
+
+    Returns (tokens [W, n_steps], valid [W, n_steps] bool, pool,
+    final lengths [W], final remaining [W]) — the host reconciles per-lane
+    outputs/lengths/blocks from the valid mask after the window.
+    """
+    return _paged_window(params, last_token, pool, block_tables, lengths,
+                         remaining, jax.random.split(rng, n_steps),
+                         decode_step=model.paged_decode_step,
+                         n_steps=n_steps, sampler=sampler, eos_id=eos_id)
 
 
 def generate_host_loop(model, params, first_token, cache, n_steps: int,

@@ -5,6 +5,14 @@ Runs the HeteroInfer engine (single-stream, paper-faithful), the dense
 continuous batcher (--batched), or the paged-KV batcher (--batched --paged,
 with --block-size / --max-blocks / --decode-width sizing the shared pool)
 on synthetic prompts and prints tok/s.
+
+Paged mode fuses the engine into the serving path
+(docs/heterogeneous-execution.md):
+  --sync device     fused-window decode: one dispatch per --window decode
+                    steps instead of per token (fast sync, §4.3)
+  --sync host       per-token host-synced decode (the baseline arm)
+  --engine-mode M   solver-planned prefill: admission-time prefill matmuls
+                    run the PartitionSolver plan through HeteroCtx (§4.1/4.2)
 """
 from __future__ import annotations
 
@@ -32,10 +40,25 @@ def main(argv=None):
                     help="pool size in blocks; 0 = sized from --requests")
     ap.add_argument("--decode-width", type=int, default=8,
                     help="compiled decode lanes (paged mode)")
+    ap.add_argument("--sync", default="host", choices=["host", "device"],
+                    help="paged decode arm: per-token host-synced loop vs "
+                         "fused on-device windows (one dispatch per window)")
+    ap.add_argument("--window", type=int, default=8,
+                    help="decode steps per fused dispatch (--sync device)")
+    ap.add_argument("--engine-mode", default=None,
+                    choices=["xla", "mxu", "hetero-layer", "hetero-tensor"],
+                    help="solver-planned paged prefill: route prefill "
+                         "matmuls through the HeteroCtx in this mode")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token id (paged mode)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=300)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
+    if (args.sync == "device" or args.engine_mode or args.eos_id is not None) \
+            and not (args.batched and args.paged):
+        ap.error("--sync device / --engine-mode / --eos-id apply to the "
+                 "paged batcher: add --batched --paged")
 
     import jax
     from repro.configs import get_config, get_smoke_config
@@ -56,9 +79,17 @@ def main(argv=None):
                               block_size=args.block_size,
                               max_blocks_per_seq=-(-max_len
                                                    // args.block_size),
-                              decode_width=args.decode_width)
+                              decode_width=args.decode_width,
+                              sync=args.sync, window=args.window,
+                              engine_mode=args.engine_mode,
+                              eos_id=args.eos_id)
             label = (f"paged (bs={args.block_size}, "
-                     f"blocks={num_blocks}, W={args.decode_width})")
+                     f"blocks={num_blocks}, W={args.decode_width}, "
+                     f"sync={args.sync}"
+                     + (f", window={args.window}" if args.sync == "device"
+                        else "")
+                     + (f", engine={args.engine_mode}" if args.engine_mode
+                        else "") + ")")
         else:
             cb = ContinuousBatcher(cfg, max_batch=4, max_len=max_len)
             label = "batched"
@@ -75,6 +106,11 @@ def main(argv=None):
         print(f"{label}: {args.requests} reqs, {tok} tokens in {dt:.2f}s "
               f"({tok / dt:.1f} tok/s, peak concurrency "
               f"{cb.peak_active})")
+        if args.paged:
+            print(f"  decode: {cb.decode_dispatches} host dispatches for "
+                  f"{cb.decode_steps} decoded tokens "
+                  f"({cb.decode_steps / max(cb.decode_dispatches, 1):.1f} "
+                  f"tokens/dispatch)")
         return
 
     from repro.core.engine import InferenceEngine

@@ -7,8 +7,24 @@
     prefill(params, tokens, cache) -> (last_logits, cache)
     decode_step(params, token, cache) -> (logits, cache)
 Encoder-only archs expose ``encode`` instead of prefill/decode.
+
+Attention-family models additionally expose the paged-KV trio used by the
+serving scheduler (serving/scheduler.py::PagedBatcher):
+    init_paged_cache(num_blocks, block_size, dtype) -> pool
+    paged_prefill(params, tokens, pool, block_table, start_index)
+        -> (last_logits, pool)
+    paged_decode_step(params, token, pool, block_tables, lengths)
+        -> (logits, pool)
+``paged_decode_step`` is also the body of the fused-window decode scan
+(core/sync.py::paged_decode_window): it must stay a pure pool -> pool
+function of statically-shaped operands so a ``lax.scan`` can carry the pool
+across a whole window with zero host round-trips.
+
 All accept ``unroll=`` (roofline cost probes) and ``hetero_ctx=`` (the
-HeteroInfer partitioned-matmul context) keyword args where meaningful.
+HeteroInfer partitioned-matmul context) keyword args where meaningful; the
+context covers every partitionable site, including the LM head
+(``transformer._head_logits``). Partitioning is an execution schedule, never
+a numerics change — any hetero_ctx mode must generate identical tokens.
 """
 from __future__ import annotations
 

@@ -133,6 +133,17 @@ def _head_matrix(params, cfg):
     return (params["embed"].T if cfg.tie_embeddings else params["head"])
 
 
+def _head_logits(params, x, cfg, hetero_ctx=None):
+    """LM-head matmul — a partitionable site like any other (the latency
+    table profiles it as "head"), so inference paths route it through the
+    HeteroCtx when one is given."""
+    if hetero_ctx is not None:
+        y = hetero_ctx.matmul(x, _head_matrix(params, cfg), name="head")
+    else:
+        y = x @ _head_matrix(params, cfg)
+    return y.astype(jnp.float32)
+
+
 def loss_fn(params, inputs, targets, cfg, *, unroll=False):
     """Training objective: next-token CE (+ MoE aux). inputs [B,S] or [B,S,D]."""
     S = inputs.shape[1]
@@ -171,7 +182,7 @@ def prefill(params, tokens, cache, cfg, *, start_index=0, unroll=False,
                             cache=cache, cache_index=start_index,
                             unroll=unroll, hetero_ctx=hetero_ctx)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = (x[:, -1:, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    logits = _head_logits(params, x[:, -1:, :], cfg, hetero_ctx)
     return logits, {"k": nkv["k"], "v": nkv["v"],
                     "index": jnp.asarray(start_index + S, jnp.int32)}
 
@@ -226,7 +237,7 @@ def paged_prefill(params, tokens, pool, cfg, *, block_table, start_index=0,
                                 pool=pool, block_table=block_table,
                                 unroll=unroll, hetero_ctx=hetero_ctx)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = (x[:, -1:, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    logits = _head_logits(params, x[:, -1:, :], cfg, hetero_ctx)
     return logits, pool
 
 
@@ -242,7 +253,7 @@ def paged_decode_step(params, token, pool, cfg, *, block_tables, lengths,
                                 pool=pool, block_table=block_tables,
                                 unroll=unroll, hetero_ctx=hetero_ctx)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = (x @ _head_matrix(params, cfg)).astype(jnp.float32)
+    logits = _head_logits(params, x, cfg, hetero_ctx)
     return logits, pool
 
 
@@ -258,5 +269,5 @@ def decode_step(params, token, cache, cfg, *, unroll=False, hetero_ctx=None):
                             cache=cache, cache_index=idx, unroll=unroll,
                             hetero_ctx=hetero_ctx)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = (x @ _head_matrix(params, cfg)).astype(jnp.float32)
+    logits = _head_logits(params, x, cfg, hetero_ctx)
     return logits, {"k": nkv["k"], "v": nkv["v"], "index": idx + 1}

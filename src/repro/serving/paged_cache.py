@@ -139,17 +139,27 @@ class PagedKVCache:
         self._reserved_unheld += need - now
         return seq
 
+    def grow_to(self, seq: SequenceBlocks, n_tokens: int) -> int:
+        """Ensure ``seq`` owns blocks covering writes of its first
+        ``n_tokens`` tokens — a whole fused decode window at once, so the
+        device can scan several steps with no allocator round-trip. Draws on
+        the admission-time reservation, so it cannot fail for any target
+        within the admitted ``prompt + max_new_tokens`` budget. Returns the
+        number of blocks allocated."""
+        need = self.blocks_for(n_tokens)
+        grown = 0
+        while len(seq.blocks) < need:
+            assert len(seq.blocks) < seq.reserved, "grew past reservation"
+            seq.append_block(self.allocator.alloc(1)[0])
+            self._reserved_unheld -= 1
+            grown += 1
+        return grown
+
     def maybe_grow(self, seq: SequenceBlocks) -> bool:
         """Before a decode step writing position ``seq.length``: allocate the
-        next block if the write crosses a block boundary. Draws on the
-        request's admission-time reservation, so it cannot fail. Returns
-        True if a block was allocated (block-granularity backfill signal)."""
-        if seq.length < len(seq.blocks) * self.block_size:
-            return False
-        assert len(seq.blocks) < seq.reserved, "grew past reservation"
-        seq.append_block(self.allocator.alloc(1)[0])
-        self._reserved_unheld -= 1
-        return True
+        next block if the write crosses a block boundary. Returns True if a
+        block was allocated (block-granularity backfill signal)."""
+        return self.grow_to(seq, seq.length + 1) > 0
 
     def close_sequence(self, seq: SequenceBlocks) -> None:
         self.allocator.free(seq.blocks)

@@ -14,6 +14,20 @@ fixed slots, so many short requests can share the memory one long request
 used to reserve under the dense scheme, and the queue backfills at block
 granularity — the KV-capacity lever the paper's unified-memory analysis
 (§3, §4.2) identifies as the mobile serving bottleneck.
+
+The paged batcher additionally fuses the HeteroInfer engine into the
+serving path (docs/heterogeneous-execution.md):
+
+  * ``sync='device'`` — fast-sync decode (§4.3): one jitted ``lax.scan``
+    runs a ``window`` of paged decode steps per dispatch, so the scheduler
+    pays one host round-trip per WINDOW instead of per token (the paper's
+    ~400us-clFinish-per-kernel problem, at serving batch widths).
+    ``sync='host'`` keeps the per-token host-synced loop as the measurable
+    baseline arm.
+  * ``engine_mode=...`` — solver-planned prefill (§4.1/§4.2): admission-time
+    prefill chunks route every matmul through a ``HeteroCtx`` whose
+    ``PartitionSolver`` plan was solved offline for this model, with one
+    compiled graph per chunk length ('graphs generated in advance').
 """
 from __future__ import annotations
 
@@ -187,14 +201,30 @@ class PagedBatcher:
 
     Decode runs as ONE jitted graph of static width ``decode_width``:
     inactive lanes carry a null block table and length 0, sinking their
-    writes into the pool's null block.
+    writes into the pool's null block. With ``sync='device'`` that graph is
+    a fused WINDOW of ``window`` decode steps (core/sync.py
+    ``paged_decode_window``): block tables are pre-grown on the host to
+    cover the whole window's writes, per-lane budgets/EOS are masked inside
+    the scan, and lengths/blocks are reconciled on the host after each
+    window — one dispatch per window instead of per token.
+
+    ``engine_mode`` in {'xla', 'mxu', 'hetero-layer', 'hetero-tensor'}
+    routes prefill matmuls through the solver-planned HeteroCtx
+    (partitioning is an execution schedule, never a numerics change, so
+    greedy outputs are identical across engine modes and sync arms).
     """
 
     def __init__(self, cfg, params=None, *, num_blocks: int = 65,
                  block_size: int = 32, max_blocks_per_seq: int | None = None,
                  decode_width: int = 8, buckets=(64, 128, 256),
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
-                 cache_dtype=None):
+                 cache_dtype=None, sync: str = "host", window: int = 8,
+                 engine_mode: str | None = None, eos_id: int | None = None,
+                 interpret: bool = True):
+        if sync not in ("host", "device"):
+            raise ValueError(f"sync must be 'host' or 'device', got {sync!r}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
         self.cfg = cfg
         self.model = build_model(cfg)
         if self.model.paged_decode_step is None:
@@ -215,8 +245,30 @@ class PagedBatcher:
         self.lanes: list[Optional[_PagedLane]] = [None] * decode_width
         self.queue: list[Request] = []
         self.peak_active = 0
+        self.sync = sync
+        self.window = window
+        self.eos_id = eos_id
+        self.engine_mode = engine_mode
+        if engine_mode is not None:
+            from repro.core.engine import build_hetero_ctx
+            self.ctx = build_hetero_ctx(
+                cfg, engine_mode,
+                sync_mode="fast" if sync == "device" else "host",
+                interpret=interpret)
+        else:
+            self.ctx = None
+        # observability: host dispatches actually issued for decode vs decode
+        # tokens produced — the fused-window win is dispatches << steps
+        self.decode_dispatches = 0
+        self.decode_steps = 0
 
-        self._prefill = jax.jit(self.model.paged_prefill, donate_argnums=(2,))
+        # the solver plan is baked in at trace time ('graphs generated in
+        # advance'): jit compiles one graph per chunk length, so standard
+        # buckets hit the compile cache and only a novel ragged remainder
+        # pays the trace+compile that bucketing amortizes
+        self._prefill = jax.jit(partial(self.model.paged_prefill,
+                                        hetero_ctx=self.ctx),
+                                donate_argnums=(2,))
         self._decode = jax.jit(self.model.paged_decode_step,
                                donate_argnums=(2,))
 
@@ -255,8 +307,10 @@ class PagedBatcher:
             self.rng, k = jax.random.split(self.rng)
             first = int(sample(logits[:, -1, :], k, self.sampler)[0])
             req.output.append(first)
-            self.lanes[lane] = _PagedLane(req=req, seq=seq,
-                                          budget=req.max_new_tokens - 1)
+            budget = req.max_new_tokens - 1
+            if self.eos_id is not None and first == self.eos_id:
+                budget = 0              # satisfied at prefill, like max=1
+            self.lanes[lane] = _PagedLane(req=req, seq=seq, budget=budget)
 
     def _finish(self, lane: int):
         st = self.lanes[lane]
@@ -266,20 +320,31 @@ class PagedBatcher:
 
     # ----------------------------------------------------------------- run --
     def step(self):
-        """One tick: admit by free blocks, one batched paged decode."""
+        """One tick: admit by free blocks, one batched paged decode — a
+        single host-synced step (sync='host') or a fused window of
+        ``self.window`` steps in one dispatch (sync='device')."""
         self._admit()
         active = [i for i in range(self.W) if self.lanes[i] is not None]
         self.peak_active = max(self.peak_active, len(active))
         if not active:
             return False
-        # zero-budget admissions (max_new_tokens == 1) finish at prefill
+        # zero-budget admissions (max_new_tokens == 1, or EOS sampled at
+        # prefill) finish without a decode step
         for i in list(active):
             if self.lanes[i].budget <= 0:
                 self._finish(i)
                 active.remove(i)
         if not active:
             return False
+        if self.sync == "device":
+            self._decode_window(active)
+        else:
+            self._decode_tick(active)
+        return True
 
+    def _decode_tick(self, active):
+        """Host-synced baseline arm: ONE decode step, one dispatch + host
+        round-trip per generated token (the paper's GPU-2/clFinish cost)."""
         tables = np.zeros((self.W, self.kv.max_blocks_per_seq), np.int32)
         lengths = np.zeros((self.W,), np.int32)
         last = np.zeros((self.W, 1), np.int32)
@@ -293,16 +358,65 @@ class PagedBatcher:
             self.params, jnp.asarray(last), self.kv.pool,
             block_tables=jnp.asarray(tables),
             lengths=jnp.asarray(lengths))
+        self.decode_dispatches += 1
         self.rng, k = jax.random.split(self.rng)
         toks = np.asarray(sample(logits[:, -1, :], k, self.sampler))
         for i in active:
             st = self.lanes[i]
-            st.req.output.append(int(toks[i]))
+            tok = int(toks[i])
+            st.req.output.append(tok)
             st.seq.length += 1
             st.budget -= 1
-            if st.budget <= 0:
+            self.decode_steps += 1
+            if st.budget <= 0 or (self.eos_id is not None
+                                  and tok == self.eos_id):
                 self._finish(i)
-        return True
+
+    def _decode_window(self, active):
+        """Fast-sync arm (§4.3 at serving widths): ONE dispatch runs up to
+        ``self.window`` decode steps for every lane. Each lane's block
+        table is pre-grown to cover its whole window (bounded by its
+        remaining budget, so growth stays inside the admission-time
+        reservation); the device masks lanes that exhaust their budget or
+        hit EOS mid-window; the host then reconciles outputs, lengths and
+        blocks from the returned valid mask."""
+        from repro.core.sync import paged_decode_window
+
+        w = self.window
+        tables = np.zeros((self.W, self.kv.max_blocks_per_seq), np.int32)
+        lengths = np.zeros((self.W,), np.int32)
+        remaining = np.zeros((self.W,), np.int32)
+        last = np.zeros((self.W, 1), np.int32)
+        for i in active:
+            st = self.lanes[i]
+            steps = min(w, st.budget)
+            # window writes positions length .. length+steps-1, all inside
+            # the admission reservation (length+steps <= prompt+max_new)
+            self.kv.grow_to(st.seq, st.seq.length + steps)
+            tables[i] = st.seq.table
+            lengths[i] = st.seq.length
+            remaining[i] = steps
+            last[i, 0] = st.req.output[-1]
+        self.rng, sub = jax.random.split(self.rng)
+        toks, valid, self.kv.pool, _, _ = paged_decode_window(
+            self.model, self.params, jnp.asarray(last), self.kv.pool,
+            jnp.asarray(tables), jnp.asarray(lengths),
+            jnp.asarray(remaining), sub, w,
+            sampler=self.sampler, eos_id=self.eos_id)
+        self.decode_dispatches += 1
+        toks = np.asarray(toks)
+        valid = np.asarray(valid)
+        for i in active:
+            st = self.lanes[i]
+            emitted = [int(t) for t in toks[i][valid[i]]]
+            st.req.output.extend(emitted)
+            st.seq.length += len(emitted)
+            st.budget -= len(emitted)
+            self.decode_steps += len(emitted)
+            hit_eos = (self.eos_id is not None
+                       and self.eos_id in emitted)
+            if st.budget <= 0 or hit_eos:
+                self._finish(i)
 
     def run(self, requests: list[Request], max_ticks: int = 10_000):
         for r in requests:

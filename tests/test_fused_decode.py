@@ -1,0 +1,192 @@
+"""Hetero-aware paged serving: fused-window (fast-sync) decode vs the
+host-synced loop, and solver-planned vs dense-strategy paged prefill.
+
+The contracts under test mirror the engine arms' invariant: fast sync and
+solver partitioning are EXECUTION SCHEDULE changes, never numerics changes,
+so greedy token streams must match exactly across every arm."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.engine import build_hetero_ctx
+from repro.models import build_model
+from repro.serving.scheduler import PagedBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
+                                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    return cfg, model, params
+
+
+def _ref_generate(model, params, prompt, n):
+    cache = model.init_cache(batch=1, max_len=256, dtype=jnp.float32)
+    logits, cache = model.prefill(params, prompt[None], cache)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n - 1):
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def _batcher(cfg, params, **kw):
+    kw.setdefault("num_blocks", 33)
+    kw.setdefault("block_size", 16)
+    kw.setdefault("decode_width", 4)
+    kw.setdefault("buckets", (32, 64))
+    kw.setdefault("cache_dtype", jnp.float32)
+    return PagedBatcher(cfg, params, **kw)
+
+
+# ------------------------------------------------------ fused-window decode --
+
+def test_fused_window_matches_host_loop(smoke_model):
+    """Mixed prompt lengths AND mixed budgets: requests finish at different
+    steps inside the same window (budgets 5/9/3/7 with window 4), so every
+    window carries a partially-masked lane. Both arms must equal the
+    sequential per-request reference token-for-token."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (37, 75, 20, 9)]
+    budgets = [5, 9, 3, 7]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=m)
+                for i, (p, m) in enumerate(zip(prompts, budgets))]
+
+    host = _batcher(cfg, params, sync="host")
+    out_h = host.run(reqs())
+    dev = _batcher(cfg, params, sync="device", window=4)
+    out_d = dev.run(reqs())
+
+    for h, d, p, m in zip(out_h, out_d, prompts, budgets):
+        ref = _ref_generate(model, params, jnp.asarray(p), m)
+        assert h.output == ref
+        assert d.output == ref
+        assert h.done and d.done
+    # fused arm: all lanes' budgets fit ceil(max(budget-1)/window) windows
+    assert dev.decode_dispatches == 2 and host.decode_dispatches == 8
+    assert dev.decode_steps == host.decode_steps == sum(budgets) - len(budgets)
+    # pool fully reclaimed (mid-window finishes returned their blocks)
+    dev.kv.allocator.check()
+    assert dev.kv.allocator.n_free == dev.kv.num_blocks - 1
+
+
+def test_fused_window_mid_window_eos(smoke_model):
+    """EOS sampled mid-window: the lane's remaining steps are masked on
+    device, and both arms stop the stream right after the EOS token."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 23).astype(np.int32)
+    ref = _ref_generate(model, params, jnp.asarray(prompt), 8)
+    # pick an EOS that first appears at step >= 2: genuinely mid-window,
+    # with valid tokens both before and (masked) after it
+    k = next(i for i in range(2, 7) if ref[i] not in ref[:i])
+    eos = ref[k]
+
+    outs = {}
+    for sync, kw in (("host", {}), ("device", {"window": 8})):
+        pb = _batcher(cfg, params, num_blocks=9, decode_width=1,
+                      sync=sync, eos_id=eos, **kw)
+        req = pb.run([Request(rid=0, prompt=prompt, max_new_tokens=8)])[0]
+        assert req.done
+        outs[sync] = req.output
+    assert outs["host"] == outs["device"] == ref[:k + 1]
+
+
+def test_fused_window_eos_at_prefill(smoke_model):
+    """EOS as the very first (prefill-sampled) token: no decode dispatch at
+    all, on either arm."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    first = _ref_generate(model, params, jnp.asarray(prompt), 1)[0]
+    for sync in ("host", "device"):
+        pb = _batcher(cfg, params, num_blocks=9, decode_width=1, sync=sync,
+                      eos_id=first)
+        req = pb.run([Request(rid=0, prompt=prompt, max_new_tokens=6)])[0]
+        assert req.done and req.output == [first]
+        assert pb.decode_dispatches == 0
+
+
+def test_fused_window_dispatch_count(smoke_model):
+    """The acceptance arithmetic: n budget-limited decode steps cost
+    ceil(n / window) dispatches on the fused arm vs n on the host arm."""
+    cfg, _, params = smoke_model
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+
+    def one(sync, **kw):
+        pb = _batcher(cfg, params, num_blocks=9, decode_width=1, sync=sync,
+                      **kw)
+        pb.run([Request(rid=0, prompt=prompt, max_new_tokens=9)])
+        return pb
+    host = one("host")
+    dev = one("device", window=4)
+    assert host.decode_steps == dev.decode_steps == 8
+    assert host.decode_dispatches == 8
+    assert dev.decode_dispatches == 2            # ceil(8 / 4)
+
+
+# -------------------------------------------------- solver-planned prefill --
+
+def _paged_prefill_logits(model, prompt, params, ctx):
+    S, BS, NBmax = len(prompt), 16, 8
+    pool = model.init_paged_cache(num_blocks=9, block_size=BS,
+                                  dtype=jnp.float32)
+    table = np.zeros((NBmax,), np.int32)
+    nblk = -(-S // BS)
+    table[:nblk] = np.arange(1, nblk + 1)
+    logits, _ = model.paged_prefill(params, jnp.asarray(prompt)[None], pool,
+                                    block_table=jnp.asarray(table)[None],
+                                    hetero_ctx=ctx)
+    return np.asarray(logits)
+
+
+def test_solver_planned_prefill_matches_dense(smoke_model):
+    """Solver-planned paged prefill vs the dense (no-ctx) strategy: the
+    xla arm is BIT-exact (same dot, different dispatch); kernel-path arms
+    (mxu / hetero-tensor) accumulate tiles in a different order, so they
+    are ULP-close and argmax-identical — the same invariant the engine
+    arms assert."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 37).astype(np.int32)
+    base = _paged_prefill_logits(model, prompt, params, None)
+
+    xla = _paged_prefill_logits(model, prompt, params,
+                                build_hetero_ctx(cfg, "xla"))
+    assert np.array_equal(base, xla)
+
+    for mode in ("hetero-tensor", "mxu"):
+        got = _paged_prefill_logits(model, prompt, params,
+                                    build_hetero_ctx(cfg, mode))
+        np.testing.assert_allclose(got, base, atol=1e-4, rtol=1e-5)
+        assert np.argmax(got[0, -1]) == np.argmax(base[0, -1]), mode
+
+
+def test_engine_mode_batcher_token_exact(smoke_model):
+    """End to end: solver-planned prefill + fused-window decode through the
+    batcher generates the same tokens as the dense host-synced baseline."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (37, 70, 21)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+
+    base = _batcher(cfg, params, decode_width=3, sync="host").run(reqs())
+    hetero = _batcher(cfg, params, decode_width=3, sync="device", window=4,
+                      engine_mode="hetero-tensor").run(reqs())
+    for b, h, p in zip(base, hetero, prompts):
+        ref = _ref_generate(model, params, jnp.asarray(p), 5)
+        assert b.output == h.output == ref

@@ -82,6 +82,24 @@ def test_cache_reservation_accounting(smoke_model):
     assert kv.allocator.n_free == 8 and kv.n_free_unreserved == 8
 
 
+def test_cache_grow_to_window(smoke_model):
+    """Window-sized growth: one allocator transaction covers a whole fused
+    decode window, stays inside the reservation, and close returns all."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=9, block_size=16, dtype=jnp.float32)
+    seq = kv.open_sequence(prompt_tokens=20, total_tokens=60)   # 2 now, 4 rsv
+    assert len(seq.blocks) == 2 and seq.reserved == 4
+    seq.length = 20
+    # an 8-step window writes positions 20..27 -> still inside block 2
+    assert kv.grow_to(seq, 28) == 0
+    # a window reaching position 47 needs block 3; position 48 needs block 4
+    assert kv.grow_to(seq, 48) == 1
+    assert kv.grow_to(seq, 60) == 1
+    assert len(seq.blocks) == 4 and kv.n_free_unreserved == 8 - 4
+    kv.close_sequence(seq)
+    assert kv.allocator.n_free == 8 and kv.n_free_unreserved == 8
+
+
 def test_cache_rejects_oversized_request(smoke_model):
     cfg, _, _ = smoke_model
     kv = PagedKVCache(cfg, num_blocks=5, block_size=16,
