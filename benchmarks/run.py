@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_e2e",               # Fig 12 + Table 4
     "benchmarks.bench_paged",             # paged vs dense KV at equal memory
     "benchmarks.bench_serve_sync",        # host-synced vs fused-window decode
+    "benchmarks.bench_mixed_batch",       # stage-parallel prefill⊕decode fusion
     "benchmarks.roofline_report",         # §Roofline
 ]
 

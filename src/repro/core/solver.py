@@ -16,6 +16,12 @@ Strategies (paper §4.2):
                (Fig 9) — this is also how dynamic shapes avoid recompiles
   * HYBRID   — ACT bucketing on tokens + WEIGHT split of the bucketed part
   * PAD      — pad M up to the next bucket, MXU only (the Padding baseline)
+  * MIXED    — stage-parallel serving pair (``solve_mixed``): a decode
+               micro-batch on the flexible path running CONCURRENTLY with an
+               aligned prefill chunk on the MXU path at the same weight site,
+               sharing the dual-stream bandwidth pool (Memory-1). This is the
+               cost model behind the scheduler's mixed batching
+               (serving/scheduler.py::PagedBatcher(mixed_batch=True)).
 
 The solver additionally picks the distributed KV layout for decode
 ("kv head-parallel" vs "kv sequence-parallel" split-KV) from the collective
@@ -29,8 +35,9 @@ from dataclasses import dataclass, asdict, field
 from pathlib import Path
 from typing import Optional
 
-from .characteristics import (TPUSpec, V5E, combine_dual, mxu_matmul_parts,
-                              sync_cost_us, xla_matmul_parts)
+from .characteristics import (TPUSpec, V5E, combine_dual, combine_single,
+                              mxu_matmul_parts, sync_cost_us,
+                              xla_matmul_parts)
 from .profiler import LatencyTable, STANDARD_BUCKETS, model_weight_shapes
 
 
@@ -61,15 +68,25 @@ class PartitionPlan:
     sync_mode: str
     decisions: dict = field(default_factory=dict)   # (site, M) -> Decision
     kv_mode: Optional[str] = None
+    # stage-parallel serving decisions, keyed separately so a fused pair
+    # (m_prefill + m_decode) can never collide with a plain-M decision:
+    # (site, m_prefill, m_decode) -> Decision(strategy='mixed')
+    mixed_decisions: dict = field(default_factory=dict)
 
     def decision(self, site: str, M: int) -> Optional[Decision]:
         return self.decisions.get((site, M))
+
+    def mixed_decision(self, site: str, m_prefill: int,
+                       m_decode: int) -> Optional[Decision]:
+        return self.mixed_decisions.get((site, m_prefill, m_decode))
 
     def save(self, path):
         Path(path).write_text(json.dumps({
             "arch": self.arch, "sync_mode": self.sync_mode,
             "kv_mode": self.kv_mode,
-            "decisions": [asdict(d) for d in self.decisions.values()]}))
+            "decisions": [asdict(d) for d in self.decisions.values()],
+            "mixed_decisions": [[list(k), asdict(d)] for k, d in
+                                self.mixed_decisions.items()]}))
 
     @classmethod
     def load(cls, path) -> "PartitionPlan":
@@ -79,6 +96,8 @@ class PartitionPlan:
         for d in data["decisions"]:
             dec = Decision(**d)
             plan.decisions[(dec.site, dec.M)] = dec
+        for k, d in data.get("mixed_decisions", []):
+            plan.mixed_decisions[tuple(k)] = Decision(**d)
         return plan
 
 
@@ -151,13 +170,54 @@ class PartitionSolver:
         best = min(cands, key=lambda d: d.t_us)
         return best
 
+    # ---- stage-parallel (serving) pair --------------------------------------
+    def solve_mixed(self, site: str, m_prefill: int, m_decode: int
+                    ) -> Decision:
+        """Cost the stage-parallel pair the mixed-batch scheduler fuses:
+        ``m_decode`` decode-lane tokens on the flexible path running
+        CONCURRENTLY with an ``m_prefill``-token aligned prefill chunk on
+        the MXU path at this weight site. Decode is memory-bound and
+        prefill compute-bound (paper §4.1), so the pair shares the
+        dual-stream bandwidth pool (`combine_dual`, Memory-1) instead of
+        serializing two single-stream dispatches."""
+        K, N = self.table.sites[site]
+        t_sync = sync_cost_us(self.sync_mode, self.spec)
+        m_pre = -(-m_prefill // ALIGN) * ALIGN        # MXU stage padding
+        t = combine_dual(mxu_matmul_parts(m_pre, K, N, self.spec),
+                         xla_matmul_parts(m_decode, K, N, self.spec),
+                         self.spec) + t_sync
+        return Decision(site, m_prefill + m_decode, "mixed", t,
+                        m_bucket=m_prefill,
+                        ratio=f"{m_prefill}p:{m_decode}d")
+
+    def mixed_gain_us(self, site: str, m_prefill: int, m_decode: int
+                      ) -> float:
+        """Predicted latency saved per site by fusing the pair vs running
+        the two stages back-to-back (each alone on single-stream
+        bandwidth, each paying its own sync)."""
+        K, N = self.table.sites[site]
+        t_sync = sync_cost_us(self.sync_mode, self.spec)
+        m_pre = -(-m_prefill // ALIGN) * ALIGN
+        serial = (combine_single(mxu_matmul_parts(m_pre, K, N, self.spec),
+                                 self.spec) + t_sync
+                  + combine_single(xla_matmul_parts(m_decode, K, N,
+                                                    self.spec), self.spec)
+                  + t_sync)
+        return serial - self.solve_mixed(site, m_prefill, m_decode).t_us
+
     # ---- whole-model plan ---------------------------------------------------
     def solve(self, cfg, Ms=(1, 64, 128, 192, 256, 300, 320, 512, 1024,
-                             2048, 4096)) -> PartitionPlan:
+                             2048, 4096), mixed_pairs=()) -> PartitionPlan:
+        """``mixed_pairs``: (m_prefill, m_decode) serving pairs — the
+        scheduler's (prefill chunk bucket, decode width) grid — solved per
+        site into ``plan.mixed_decisions``."""
         plan = PartitionPlan(arch=cfg.name, sync_mode=self.sync_mode)
         for site in self.table.sites:
             for M in Ms:
                 plan.decisions[(site, M)] = self.solve_site(site, M)
+            for (mp, md) in mixed_pairs:
+                plan.mixed_decisions[(site, mp, md)] = \
+                    self.solve_mixed(site, mp, md)
         plan.kv_mode = self.solve_kv_mode(cfg)
         return plan
 

@@ -13,6 +13,11 @@ Paged mode fuses the engine into the serving path
   --sync host       per-token host-synced decode (the baseline arm)
   --engine-mode M   solver-planned prefill: admission-time prefill matmuls
                     run the PartitionSolver plan through HeteroCtx (§4.1/4.2)
+  --mixed-batch     stage-parallel mixed batching: each step fuses one
+                    prefill chunk of the admitting request into the decode
+                    dispatch of the running lanes (§4.1-§4.3 at stage level)
+  --max-prefill-chunk N
+                    cap on prefill tokens fused per step (--mixed-batch)
 """
 from __future__ import annotations
 
@@ -51,14 +56,23 @@ def main(argv=None):
                          "matmuls through the HeteroCtx in this mode")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop token id (paged mode)")
+    ap.add_argument("--mixed-batch", action="store_true",
+                    help="stage-parallel mixed batching: fuse admission "
+                         "prefill chunks into decode dispatches")
+    ap.add_argument("--max-prefill-chunk", type=int, default=None,
+                    metavar="N", dest="max_prefill_chunk",
+                    help="max prefill tokens fused per scheduler step "
+                         "(--mixed-batch; default: largest bucket)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=300)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
-    if (args.sync == "device" or args.engine_mode or args.eos_id is not None) \
-            and not (args.batched and args.paged):
-        ap.error("--sync device / --engine-mode / --eos-id apply to the "
-                 "paged batcher: add --batched --paged")
+    if (args.sync == "device" or args.engine_mode or args.eos_id is not None
+            or args.mixed_batch) and not (args.batched and args.paged):
+        ap.error("--sync device / --engine-mode / --eos-id / --mixed-batch "
+                 "apply to the paged batcher: add --batched --paged")
+    if args.max_prefill_chunk is not None and not args.mixed_batch:
+        ap.error("--max-prefill-chunk applies to --mixed-batch")
 
     import jax
     from repro.configs import get_config, get_smoke_config
@@ -82,14 +96,17 @@ def main(argv=None):
                               decode_width=args.decode_width,
                               sync=args.sync, window=args.window,
                               engine_mode=args.engine_mode,
-                              eos_id=args.eos_id)
+                              eos_id=args.eos_id,
+                              mixed_batch=args.mixed_batch,
+                              max_prefill_chunk_per_step=args.max_prefill_chunk)
             label = (f"paged (bs={args.block_size}, "
                      f"blocks={num_blocks}, W={args.decode_width}, "
                      f"sync={args.sync}"
                      + (f", window={args.window}" if args.sync == "device"
                         else "")
                      + (f", engine={args.engine_mode}" if args.engine_mode
-                        else "") + ")")
+                        else "")
+                     + (", mixed" if args.mixed_batch else "") + ")")
         else:
             cb = ContinuousBatcher(cfg, max_batch=4, max_len=max_len)
             label = "batched"
@@ -111,6 +128,9 @@ def main(argv=None):
                   f"{cb.decode_steps} decoded tokens "
                   f"({cb.decode_steps / max(cb.decode_dispatches, 1):.1f} "
                   f"tokens/dispatch)")
+            print(f"  prefill: {cb.prefill_dispatches} standalone dispatches,"
+                  f" {cb.fused_steps} chunks fused into decode dispatches "
+                  f"({cb.total_dispatches} host dispatches total)")
         return
 
     from repro.core.engine import InferenceEngine

@@ -18,7 +18,10 @@ serving scheduler (serving/scheduler.py::PagedBatcher):
 ``paged_decode_step`` is also the body of the fused-window decode scan
 (core/sync.py::paged_decode_window): it must stay a pure pool -> pool
 function of statically-shaped operands so a ``lax.scan`` can carry the pool
-across a whole window with zero host round-trips.
+across a whole window with zero host round-trips. ``mixed_step`` is the
+stage-parallel variant: one dispatch runs every decode lane AND one prefill
+chunk of an admitting request against the same pool (the scheduler's
+mixed-batch mode), with the same purity/static-shape contract.
 
 All accept ``unroll=`` (roofline cost probes) and ``hetero_ctx=`` (the
 HeteroInfer partitioned-matmul context) keyword args where meaningful; the
@@ -51,6 +54,9 @@ class Model:
     init_paged_cache: Optional[Callable] = None
     paged_prefill: Optional[Callable] = None
     paged_decode_step: Optional[Callable] = None
+    # stage-parallel mixed batch: one dispatch = batched paged decode step
+    # for all lanes + one prefill chunk, sharing a single pool write
+    mixed_step: Optional[Callable] = None
 
 
 def build_model(cfg) -> Model:
@@ -73,6 +79,7 @@ def build_model(cfg) -> Model:
             init_paged_cache=partial(transformer.init_paged_cache, cfg),
             paged_prefill=partial(transformer.paged_prefill, cfg=cfg),
             paged_decode_step=partial(transformer.paged_decode_step, cfg=cfg),
+            mixed_step=partial(transformer.mixed_step, cfg=cfg),
         )
     return Model(
         cfg=cfg, init=init, loss=loss,

@@ -241,6 +241,68 @@ def paged_prefill(params, tokens, pool, cfg, *, block_table, start_index=0,
     return logits, pool
 
 
+def mixed_step(params, decode_tokens, prefill_tokens, pool, cfg, *,
+               decode_tables, decode_lengths, prefill_table, prefill_start=0,
+               unroll=False, hetero_ctx=None):
+    """Stage-parallel mixed batch: ONE dispatch runs a batched paged decode
+    step for every lane AND one prefill chunk of an admitting request,
+    sharing a single paged-pool write (paper §4.1-§4.3 applied at stage
+    level: decode is the memory-bound flexible-path stream, the aligned
+    prefill chunk is the compute-bound MXU-path stream, and running them
+    concurrently is what fills both the compute and bandwidth envelopes).
+
+    decode_tokens: [W, 1]; prefill_tokens: [1, C]; decode_tables: [W, NBmax];
+    decode_lengths: [W]; prefill_table: [1, NBmax]. The two streams touch
+    disjoint pool blocks (the allocator never shares a block), so fusion is
+    an execution-schedule change, never a numerics change. Decode lanes stay
+    on the flexible path (no hetero_ctx — they are Memory-1 bound); the
+    prefill chunk routes its matmuls through ``hetero_ctx`` when given.
+
+    Returns (decode_logits [W, 1, V], prefill_logits [1, 1, V], pool).
+    """
+    xd = _embed(params, decode_tokens, cfg)
+    xp = _embed(params, prefill_tokens, cfg)
+    C = prefill_tokens.shape[1]
+    dec_pos = decode_lengths[:, None].astype(jnp.int32)
+    pre_pos = prefill_start + jnp.arange(C, dtype=jnp.int32)
+
+    def body(lp, xd, xp, pk, pv):
+        # decode lanes first (flexible path), prefill chunk second
+        # (solver-planned path); order is arbitrary — disjoint block tables
+        xd2, nkv_d, _ = _layer(lp, xd, cfg, positions=dec_pos, unroll=unroll,
+                               paged={"k": pk, "v": pv,
+                                      "block_table": decode_tables})
+        xp2, nkv_p, _ = _layer(lp, xp, cfg, positions=pre_pos, unroll=unroll,
+                               hetero_ctx=hetero_ctx,
+                               paged={"k": nkv_d["k"], "v": nkv_d["v"],
+                                      "block_table": prefill_table})
+        return xd2, xp2, nkv_p["k"], nkv_p["v"]
+
+    if unroll:
+        new_ks, new_vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            xd, xp, nk, nv = body(lp, xd, xp, pool["k"][i], pool["v"][i])
+            new_ks.append(nk); new_vs.append(nv)
+        pool = {"k": jnp.stack(new_ks), "v": jnp.stack(new_vs)}
+    else:
+        def step(carry, xs):
+            xd, xp = carry
+            lp, pk, pv = xs
+            xd2, xp2, nk, nv = body(lp, xd, xp, pk, pv)
+            return (xd2, xp2), (nk, nv)
+
+        (xd, xp), (nk, nv) = jax.lax.scan(
+            step, (xd, xp), (params["layers"], pool["k"], pool["v"]))
+        pool = {"k": nk, "v": nv}
+
+    xd = rms_norm(xd, params["final_norm"], cfg.norm_eps)
+    dec_logits = _head_logits(params, xd, cfg)     # flexible-path head
+    xp = rms_norm(xp, params["final_norm"], cfg.norm_eps)
+    pre_logits = _head_logits(params, xp[:, -1:, :], cfg, hetero_ctx)
+    return dec_logits, pre_logits, pool
+
+
 def paged_decode_step(params, token, pool, cfg, *, block_tables, lengths,
                       unroll=False, hetero_ctx=None):
     """One batched decode step over the page pool. token: [B, 1];

@@ -169,6 +169,16 @@ class PagedKVCache:
         seq.table[:] = 0
         self.allocator.check()
 
+    def assert_drained(self) -> None:
+        """Leak check after the scheduler drains: every block is back in the
+        free list and no admission reservation is outstanding. Run by the
+        scheduler fuzz/conformance tests after every arm."""
+        self.allocator.check()
+        held = self.num_blocks - 1 - self.allocator.n_free
+        assert held == 0, f"{held} pool blocks leaked after drain"
+        assert self._reserved_unheld == 0, \
+            f"{self._reserved_unheld} reserved-unheld blocks leaked"
+
     # ------------------------------------------------------------- stats --
     def memory_tokens(self) -> int:
         """Total token capacity of the pool (for equal-memory comparisons);

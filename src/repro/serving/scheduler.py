@@ -28,6 +28,15 @@ serving path (docs/heterogeneous-execution.md):
     prefill chunks route every matmul through a ``HeteroCtx`` whose
     ``PartitionSolver`` plan was solved offline for this model, with one
     compiled graph per chunk length ('graphs generated in advance').
+  * ``mixed_batch=True`` — stage-parallel mixed batching (§4.1-§4.3 at the
+    stage level): each scheduler step coalesces ONE bucket-sized prefill
+    chunk of the admitting request with the decode step/window of every
+    running lane into a single jitted dispatch (``transformer.mixed_step``
+    / the mixed ``paged_decode_window``), sharing one paged-pool write.
+    Decode (memory-bound, flexible path) and the prefill chunk
+    (compute-bound, aligned MXU path) run concurrently — the SoC's full
+    compute AND bandwidth envelopes — so admission stops costing its own
+    dispatches and never stalls decode.
 """
 from __future__ import annotations
 
@@ -187,6 +196,17 @@ class _PagedLane:
     budget: int = 0
 
 
+@dataclass
+class _Admission:
+    """A request whose prefill is in flight under mixed batching: its blocks
+    are already reserved, its prompt drains one bucket-sized chunk per
+    scheduler step, each chunk fused into that step's decode dispatch."""
+    req: Request
+    seq: SequenceBlocks
+    chunks: list                       # remaining chunk lengths
+    idx: int = 0                       # prompt tokens prefilled so far
+
+
 class PagedBatcher:
     """Continuous batching over the paged KV pool.
 
@@ -212,6 +232,17 @@ class PagedBatcher:
     routes prefill matmuls through the solver-planned HeteroCtx
     (partitioning is an execution schedule, never a numerics change, so
     greedy outputs are identical across engine modes and sync arms).
+
+    ``mixed_batch=True`` turns on stage-parallel mixed batching: admission
+    prefill no longer runs as its own dispatches. Instead one request at a
+    time holds an ``_Admission`` ticket and each scheduler step fuses its
+    next prompt chunk (capped at ``max_prefill_chunk_per_step`` tokens)
+    into the decode dispatch of the running lanes — ``model.mixed_step``
+    under ``sync='host'``, a chunk-carrying ``paged_decode_window`` under
+    ``sync='device'``. Chunks only fall back to standalone prefill
+    dispatches when no lane is decoding. Fusion reorders dispatches, never
+    math: the two streams touch disjoint pool blocks, so greedy outputs
+    stay token-identical to the admit-then-decode arms.
     """
 
     def __init__(self, cfg, params=None, *, num_blocks: int = 65,
@@ -220,11 +251,17 @@ class PagedBatcher:
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
                  cache_dtype=None, sync: str = "host", window: int = 8,
                  engine_mode: str | None = None, eos_id: int | None = None,
+                 mixed_batch: bool = False,
+                 max_prefill_chunk_per_step: int | None = None,
                  interpret: bool = True):
         if sync not in ("host", "device"):
             raise ValueError(f"sync must be 'host' or 'device', got {sync!r}")
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
+        if max_prefill_chunk_per_step is not None \
+                and max_prefill_chunk_per_step < 1:
+            raise ValueError("max_prefill_chunk_per_step must be >= 1, got "
+                             f"{max_prefill_chunk_per_step}")
         self.cfg = cfg
         self.model = build_model(cfg)
         if self.model.paged_decode_step is None:
@@ -249,18 +286,39 @@ class PagedBatcher:
         self.window = window
         self.eos_id = eos_id
         self.engine_mode = engine_mode
+        self.mixed_batch = mixed_batch
+        # mixed-batch admission chunking: bucket-sized pieces no larger than
+        # the per-step cap (so one step never fuses more than one cap's worth
+        # of compute-bound prefill into the latency-sensitive decode path)
+        cap = max_prefill_chunk_per_step
+        self.max_prefill_chunk_per_step = cap
+        self.admit_buckets = (self.buckets if cap is None else
+                              (tuple(b for b in self.buckets if b <= cap)
+                               or (cap,)))
+        self._admitting: Optional[_Admission] = None
         if engine_mode is not None:
             from repro.core.engine import build_hetero_ctx
             self.ctx = build_hetero_ctx(
                 cfg, engine_mode,
                 sync_mode="fast" if sync == "device" else "host",
+                # offline-plan completeness, not a runtime input: fusion is
+                # structural (mixed_step), but the saved plan records the
+                # solver's MIXED costing of the (chunk bucket, decode width)
+                # pairs this scheduler fuses, for analysis/benchmarks
+                mixed_pairs=(tuple((b, decode_width)
+                                   for b in self.admit_buckets)
+                             if mixed_batch else ()),
                 interpret=interpret)
         else:
             self.ctx = None
-        # observability: host dispatches actually issued for decode vs decode
-        # tokens produced — the fused-window win is dispatches << steps
+        # observability: host dispatches actually issued vs tokens produced —
+        # the fused-window win is decode dispatches << decode steps; the
+        # mixed-batch win is prefill chunks riding decode dispatches for free
+        # (fused_steps up, prefill_dispatches down, total_dispatches down)
         self.decode_dispatches = 0
         self.decode_steps = 0
+        self.prefill_dispatches = 0      # standalone prefill-chunk dispatches
+        self.fused_steps = 0             # prefill chunks fused into decode
 
         # the solver plan is baked in at trace time ('graphs generated in
         # advance'): jit compiles one graph per chunk length, so standard
@@ -271,46 +329,115 @@ class PagedBatcher:
                                 donate_argnums=(2,))
         self._decode = jax.jit(self.model.paged_decode_step,
                                donate_argnums=(2,))
+        # stable callables (one jit cache each) for the mixed-batch arms:
+        # decode lanes stay on the flexible path, the chunk gets the ctx
+        self._mixed_step_fn = partial(self.model.mixed_step,
+                                      hetero_ctx=self.ctx)
+        self._mixed = jax.jit(self._mixed_step_fn, donate_argnums=(3,))
+
+    @property
+    def total_dispatches(self) -> int:
+        """Host dispatches issued end-to-end (prefill + decode; a fused
+        mixed step counts once — that's the point)."""
+        return self.decode_dispatches + self.prefill_dispatches
+
+    @property
+    def busy(self) -> bool:
+        """Work outstanding: queued requests, an open admission ticket, or
+        occupied decode lanes. External tick-drivers (benchmarks, tests)
+        loop on this instead of reaching into scheduler state."""
+        return bool(self.queue or self._admitting is not None
+                    or any(lane is not None for lane in self.lanes))
 
     # ------------------------------------------------------------ plumbing --
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _try_open(self, req: Request) -> Optional[SequenceBlocks]:
+        """Admission gate shared by both admission paths: validate the
+        request fits the pool at all, then reserve its blocks (or return
+        None to wait FCFS for blocks to free)."""
+        S = len(req.prompt)
+        total = S + req.max_new_tokens   # generation headroom, see step()
+        need = self.kv.blocks_for(total)
+        if need > min(self.kv.max_blocks_per_seq, self.kv.num_blocks - 1):
+            raise ValueError(
+                f"request {req.rid} needs {need} blocks "
+                f"({total} tokens @ block_size={self.block_size}) but the "
+                f"pool can never supply more than "
+                f"{min(self.kv.max_blocks_per_seq, self.kv.num_blocks - 1)}"
+                " per request — raise num_blocks/max_blocks_per_seq")
+        if not self.kv.can_admit(total):
+            return None
+        return self.kv.open_sequence(prompt_tokens=S, total_tokens=total)
+
+    def _place(self, req: Request, seq: SequenceBlocks, first: int):
+        """Prefill done: record the prefill-sampled token and occupy a lane."""
+        seq.length = len(req.prompt)
+        req.output.append(first)
+        budget = req.max_new_tokens - 1
+        if self.eos_id is not None and first == self.eos_id:
+            budget = 0                  # satisfied at prefill, like max=1
+        lane = next(i for i in range(self.W) if self.lanes[i] is None)
+        self.lanes[lane] = _PagedLane(req=req, seq=seq, budget=budget)
+
     def _admit(self):
+        """Admit-then-decode (the baseline arm): whole prompts prefill as
+        their own chunk dispatches before the request joins a lane."""
         for lane in range(self.W):
             if self.lanes[lane] is not None or not self.queue:
                 continue
-            req = self.queue[0]
-            S = len(req.prompt)
-            total = S + req.max_new_tokens   # generation headroom, see step()
-            need = self.kv.blocks_for(total)
-            if need > min(self.kv.max_blocks_per_seq, self.kv.num_blocks - 1):
-                raise ValueError(
-                    f"request {req.rid} needs {need} blocks "
-                    f"({total} tokens @ block_size={self.block_size}) but the "
-                    f"pool can never supply more than "
-                    f"{min(self.kv.max_blocks_per_seq, self.kv.num_blocks - 1)}"
-                    " per request — raise num_blocks/max_blocks_per_seq")
-            if not self.kv.can_admit(total):
-                break                        # FCFS: wait for blocks to free
-            self.queue.pop(0)
-            seq = self.kv.open_sequence(prompt_tokens=S, total_tokens=total)
+            seq = self._try_open(self.queue[0])
+            if seq is None:
+                break                    # FCFS: wait for blocks to free
+            req = self.queue.pop(0)
             bt = jnp.asarray(seq.table)[None]
             idx, logits = 0, None
-            for c in bucket_chunks(S, self.buckets):
+            for c in bucket_chunks(len(req.prompt), self.buckets):
                 piece = jnp.asarray(req.prompt[idx: idx + c], jnp.int32)
                 logits, self.kv.pool = self._prefill(
                     self.params, piece[None], self.kv.pool, block_table=bt,
                     start_index=jnp.asarray(idx, jnp.int32))
+                self.prefill_dispatches += 1
                 idx += c
-            seq.length = S
             self.rng, k = jax.random.split(self.rng)
-            first = int(sample(logits[:, -1, :], k, self.sampler)[0])
-            req.output.append(first)
-            budget = req.max_new_tokens - 1
-            if self.eos_id is not None and first == self.eos_id:
-                budget = 0              # satisfied at prefill, like max=1
-            self.lanes[lane] = _PagedLane(req=req, seq=seq, budget=budget)
+            self._place(req, seq, int(sample(logits[:, -1, :], k,
+                                             self.sampler)[0]))
+
+    def _start_admission(self):
+        """Mixed batching: take ONE admission ticket at a time. A free lane
+        is required up front (lanes only free while the ticket is open, so
+        it stays available for `_place` at the end of the prefill)."""
+        if self._admitting is not None or not self.queue:
+            return
+        if all(lane is not None for lane in self.lanes):
+            return
+        seq = self._try_open(self.queue[0])
+        if seq is None:
+            return
+        req = self.queue.pop(0)
+        self._admitting = _Admission(
+            req=req, seq=seq,
+            chunks=bucket_chunks(len(req.prompt), self.admit_buckets))
+
+    def _admission_chunk(self):
+        """Pop the admitting request's next chunk as device operands:
+        (tokens [1, C], block table [1, NBmax], start index)."""
+        adm = self._admitting
+        c = adm.chunks.pop(0)
+        piece = jnp.asarray(adm.req.prompt[adm.idx: adm.idx + c],
+                            jnp.int32)[None]
+        start = adm.idx
+        adm.idx += c
+        return piece, jnp.asarray(adm.seq.table)[None], start
+
+    def _finish_admission(self, pre_logits):
+        """Last chunk landed: sample the prefill token and occupy the lane
+        reserved at `_start_admission`."""
+        adm, self._admitting = self._admitting, None
+        self.rng, k = jax.random.split(self.rng)
+        self._place(adm.req, adm.seq,
+                    int(sample(pre_logits[:, -1, :], k, self.sampler)[0]))
 
     def _finish(self, lane: int):
         st = self.lanes[lane]
@@ -322,18 +449,44 @@ class PagedBatcher:
     def step(self):
         """One tick: admit by free blocks, one batched paged decode — a
         single host-synced step (sync='host') or a fused window of
-        ``self.window`` steps in one dispatch (sync='device')."""
-        self._admit()
+        ``self.window`` steps in one dispatch (sync='device'). Under mixed
+        batching the admitting request's next prompt chunk rides the same
+        dispatch; a standalone prefill dispatch happens only when no lane
+        is decoding."""
+        if self.mixed_batch:
+            self._start_admission()
+        else:
+            self._admit()
         active = [i for i in range(self.W) if self.lanes[i] is not None]
-        self.peak_active = max(self.peak_active, len(active))
-        if not active:
-            return False
+        self.peak_active = max(
+            self.peak_active,
+            len(active) + (self._admitting is not None))
         # zero-budget admissions (max_new_tokens == 1, or EOS sampled at
         # prefill) finish without a decode step
         for i in list(active):
             if self.lanes[i].budget <= 0:
                 self._finish(i)
                 active.remove(i)
+
+        adm_chunk = pre_logits = None
+        if self._admitting is not None:
+            adm_chunk = self._admission_chunk()
+            last_chunk = not self._admitting.chunks
+            if not active:
+                # nothing decoding: the chunk pays its own dispatch
+                piece, bt, start = adm_chunk
+                pre_logits, self.kv.pool = self._prefill(
+                    self.params, piece, self.kv.pool, block_table=bt,
+                    start_index=jnp.asarray(start, jnp.int32))
+                self.prefill_dispatches += 1
+            elif self.sync == "device":
+                pre_logits = self._decode_window(active, adm_chunk)
+            else:
+                pre_logits = self._decode_tick(active, adm_chunk)
+            if last_chunk:
+                self._finish_admission(pre_logits)
+            return True
+
         if not active:
             return False
         if self.sync == "device":
@@ -342,9 +495,12 @@ class PagedBatcher:
             self._decode_tick(active)
         return True
 
-    def _decode_tick(self, active):
+    def _decode_tick(self, active, adm_chunk=None):
         """Host-synced baseline arm: ONE decode step, one dispatch + host
-        round-trip per generated token (the paper's GPU-2/clFinish cost)."""
+        round-trip per generated token (the paper's GPU-2/clFinish cost).
+        With ``adm_chunk`` the dispatch is the fused ``mixed_step`` —
+        decode step ⊕ prefill chunk — and the chunk's last-token logits
+        are returned."""
         tables = np.zeros((self.W, self.kv.max_blocks_per_seq), np.int32)
         lengths = np.zeros((self.W,), np.int32)
         last = np.zeros((self.W, 1), np.int32)
@@ -354,10 +510,21 @@ class PagedBatcher:
             tables[i] = st.seq.table
             lengths[i] = st.seq.length
             last[i, 0] = st.req.output[-1]
-        logits, self.kv.pool = self._decode(
-            self.params, jnp.asarray(last), self.kv.pool,
-            block_tables=jnp.asarray(tables),
-            lengths=jnp.asarray(lengths))
+        pre_logits = None
+        if adm_chunk is None:
+            logits, self.kv.pool = self._decode(
+                self.params, jnp.asarray(last), self.kv.pool,
+                block_tables=jnp.asarray(tables),
+                lengths=jnp.asarray(lengths))
+        else:
+            piece, bt, start = adm_chunk
+            logits, pre_logits, self.kv.pool = self._mixed(
+                self.params, jnp.asarray(last), piece, self.kv.pool,
+                decode_tables=jnp.asarray(tables),
+                decode_lengths=jnp.asarray(lengths),
+                prefill_table=bt,
+                prefill_start=jnp.asarray(start, jnp.int32))
+            self.fused_steps += 1
         self.decode_dispatches += 1
         self.rng, k = jax.random.split(self.rng)
         toks = np.asarray(sample(logits[:, -1, :], k, self.sampler))
@@ -371,15 +538,18 @@ class PagedBatcher:
             if st.budget <= 0 or (self.eos_id is not None
                                   and tok == self.eos_id):
                 self._finish(i)
+        return pre_logits
 
-    def _decode_window(self, active):
+    def _decode_window(self, active, adm_chunk=None):
         """Fast-sync arm (§4.3 at serving widths): ONE dispatch runs up to
         ``self.window`` decode steps for every lane. Each lane's block
         table is pre-grown to cover its whole window (bounded by its
         remaining budget, so growth stays inside the admission-time
         reservation); the device masks lanes that exhaust their budget or
         hit EOS mid-window; the host then reconciles outputs, lengths and
-        blocks from the returned valid mask."""
+        blocks from the returned valid mask. With ``adm_chunk`` the window
+        additionally carries the prefill chunk (fused into its first step)
+        and returns the chunk's last-token logits."""
         from repro.core.sync import paged_decode_window
 
         w = self.window
@@ -398,11 +568,23 @@ class PagedBatcher:
             remaining[i] = steps
             last[i, 0] = st.req.output[-1]
         self.rng, sub = jax.random.split(self.rng)
-        toks, valid, self.kv.pool, _, _ = paged_decode_window(
-            self.model, self.params, jnp.asarray(last), self.kv.pool,
-            jnp.asarray(tables), jnp.asarray(lengths),
-            jnp.asarray(remaining), sub, w,
-            sampler=self.sampler, eos_id=self.eos_id)
+        pre_logits = None
+        if adm_chunk is None:
+            toks, valid, self.kv.pool, _, _ = paged_decode_window(
+                self.model, self.params, jnp.asarray(last), self.kv.pool,
+                jnp.asarray(tables), jnp.asarray(lengths),
+                jnp.asarray(remaining), sub, w,
+                sampler=self.sampler, eos_id=self.eos_id)
+        else:
+            piece, bt, start = adm_chunk
+            toks, valid, pre_logits, self.kv.pool, _, _ = paged_decode_window(
+                self.model, self.params, jnp.asarray(last), self.kv.pool,
+                jnp.asarray(tables), jnp.asarray(lengths),
+                jnp.asarray(remaining), sub, w,
+                sampler=self.sampler, eos_id=self.eos_id,
+                prefill_tokens=piece, prefill_table=bt, prefill_start=start,
+                mixed_step_fn=self._mixed_step_fn)
+            self.fused_steps += 1
         self.decode_dispatches += 1
         toks = np.asarray(toks)
         valid = np.asarray(valid)
@@ -417,13 +599,13 @@ class PagedBatcher:
                        and self.eos_id in emitted)
             if st.budget <= 0 or hit_eos:
                 self._finish(i)
+        return pre_logits
 
     def run(self, requests: list[Request], max_ticks: int = 10_000):
         for r in requests:
             self.submit(r)
         ticks = 0
-        while (self.queue or any(s is not None for s in self.lanes)) \
-                and ticks < max_ticks:
+        while self.busy and ticks < max_ticks:
             self.step()
             ticks += 1
         return requests

@@ -88,8 +88,11 @@ class CheckpointManager:
 
     # -------------------------------------------------------------- restore --
     def all_steps(self) -> list[int]:
+        # uncommitted step_NNNNNNNN.tmp dirs (async write in flight) are not
+        # checkpoints: only the atomic rename makes one visible
         return sorted(int(p.name.split("_")[1]) for p in self.dir.iterdir()
                       if p.is_dir() and p.name.startswith("step_")
+                      and not p.name.endswith(".tmp")
                       and (p / "manifest.json").exists())
 
     def latest_step(self) -> Optional[int]:

@@ -77,13 +77,13 @@ def run_resilient(n_steps: int, *, state, data, step_fn: Callable,
             policy.restarts_used += 1
             if policy.restarts_used > policy.max_restarts:
                 raise
+            ckpt.wait()          # let an in-flight async save commit first
             last = ckpt.latest_step()
             log(f"[ft] step {step} failed ({type(e).__name__}: {e}); "
                 f"restart {policy.restarts_used}/{policy.max_restarts} "
                 f"from checkpoint {last}")
             if last is None:
                 raise
-            ckpt.wait()
             restored = ckpt.restore(last, {"state": state,
                                            "data": data.state()})
             state = restored["state"]

@@ -1,4 +1,5 @@
 import os
+from dataclasses import dataclass
 
 # Tests run single-device unless a test makes its own host mesh via XLA flags
 # in a subprocess. Do NOT set xla_force_host_platform_device_count here (the
@@ -7,5 +8,74 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def smoke_model():
+    """The float32 llama3 smoke model the serving tests share: (cfg, model,
+    params). Session-scoped — params are never donated by any consumer, so
+    one init serves every module."""
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
+                                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# Shared kernel-conformance parameterization (tests/test_kernel_conformance.py)
+#
+# ONE case grid drives every Pallas kernel package: each package maps the
+# canonical (M, K, N) triple onto its own operand shapes, applies the SAME
+# pad-to-128 policy production uses (core/partition.py::HeteroCtx._mxu /
+# kernels/*/ops.py head-dim padding), and compares against its ref.py oracle.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KernelCase:
+    """Canonical conformance case: M is the token/row dim (ragged allowed),
+    K the contraction dim (odd/misaligned allowed), N the output dim."""
+    name: str
+    M: int
+    K: int
+    N: int
+
+
+CONFORMANCE_CASES = (
+    KernelCase("aligned", 128, 128, 128),        # every dim on a 128 tile
+    KernelCase("rect", 256, 384, 128),           # multi-tile, K-major
+    KernelCase("ragged_m", 77, 128, 128),        # ragged token count
+    KernelCase("odd_k", 128, 97, 128),           # genuinely odd K
+    KernelCase("ragged_both", 53, 96, 256),      # ragged M and misaligned K
+)
+
+# activation dtypes the serving/engine paths actually run; per-kernel
+# tolerance reflects the output-dtype rounding of the kernel contract
+CONFORMANCE_DTYPES = ("float32", "bfloat16", "float16")
+DTYPE_TOL = {"float32": 2e-6, "bfloat16": 2e-2, "float16": 4e-3}
+
+
+def rel_err(a, b) -> float:
+    """Max elementwise error of ``a`` vs oracle ``b``, relative to |b|max —
+    the single conformance metric every kernel package is held to."""
+    a32 = jnp.asarray(a).astype(jnp.float32)
+    b32 = jnp.asarray(b).astype(jnp.float32)
+    return float(jnp.max(jnp.abs(a32 - b32))
+                 / (jnp.max(jnp.abs(b32)) + 1e-9))
+
+
+def pad_to(x, mult: int, axis: int):
+    """Zero-pad ``axis`` up to a multiple of ``mult`` (the production
+    stage-padding policy for the aligned MXU path)."""
+    r = x.shape[axis] % mult
+    if r == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - r)
+    return jnp.pad(x, pads)

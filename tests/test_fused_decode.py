@@ -4,24 +4,13 @@ host-synced loop, and solver-planned vs dense-strategy paged prefill.
 The contracts under test mirror the engine arms' invariant: fast sync and
 solver partitioning are EXECUTION SCHEDULE changes, never numerics changes,
 so greedy token streams must match exactly across every arm."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_smoke_config
 from repro.core.engine import build_hetero_ctx
-from repro.models import build_model
 from repro.serving.scheduler import PagedBatcher, Request
 
-
-@pytest.fixture(scope="module")
-def smoke_model():
-    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
-                                              compute_dtype="float32")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(7))
-    return cfg, model, params
+# smoke_model: session-scoped fixture from conftest.py
 
 
 def _ref_generate(model, params, prompt, n):

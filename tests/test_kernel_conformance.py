@@ -1,0 +1,185 @@
+"""Unified kernel conformance harness.
+
+ONE parameterized parity grid (dtype x shape, with ragged-M / odd-K edge
+cases — tests/conftest.py::CONFORMANCE_CASES) applied uniformly to all four
+Pallas kernel packages against their pure-jnp ``ref.py`` oracles:
+
+  * ``hetero_matmul``    — f32/bf16/f16 matmul, int8 ``quant_matmul_pallas``,
+                           packed-int4 W4A16 ``q4_matmul_pallas``
+  * ``flash_attention``  — causal GQA prefill attention
+  * ``decode_attention`` — split-KV valid-prefix decode attention
+  * ``ssm_scan``         — SSD (Mamba2) chunk step
+
+Each package's adapter maps the canonical (M, K, N) case onto its operand
+shapes and applies the SAME pad-to-128 policy production uses (HeteroCtx
+stage padding / the ops-layer head-dim pad), so the ragged/odd cases
+exercise exactly the alignment path the engine routes misaligned shapes
+through. Interpret mode on CPU; parity is the contract, not wall time.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import (CONFORMANCE_CASES, CONFORMANCE_DTYPES, DTYPE_TOL,
+                      pad_to, rel_err)
+
+RNG = jax.random.PRNGKey(0)
+ALIGN = 128
+
+
+# ------------------------------------------------------------- adapters ----
+# adapter(case, dtype) -> (kernel output, oracle output, tolerance)
+
+def _matmul(case, dtype):
+    from repro.kernels.hetero_matmul.ops import mxu_matmul
+    from repro.kernels.hetero_matmul.ref import matmul_ref
+    k1, k2 = jax.random.split(RNG)
+    x = jax.random.normal(k1, (case.M, case.K), dtype)
+    w = jax.random.normal(k2, (case.K, case.N), dtype)
+    xp = pad_to(pad_to(x, ALIGN, 0), ALIGN, 1)
+    wp = pad_to(pad_to(w, ALIGN, 0), ALIGN, 1)
+    y = mxu_matmul(xp, wp)[:case.M, :case.N]
+    return y, matmul_ref(x, w), DTYPE_TOL[dtype]
+
+
+def _quant_matmul(case, dtype):
+    from repro.kernels.hetero_matmul.ops import (mxu_quant_matmul,
+                                                 quantize_weight)
+    from repro.kernels.hetero_matmul.ref import quant_matmul_ref
+    k1, k2 = jax.random.split(RNG)
+    x = jax.random.normal(k1, (case.M, case.K), dtype)
+    w = jax.random.normal(k2, (case.K, case.N), jnp.float32)
+    wp = pad_to(pad_to(w, ALIGN, 0), ALIGN, 1)
+    wq, s = quantize_weight(wp)
+    xp = pad_to(pad_to(x, ALIGN, 0), ALIGN, 1)
+    y = mxu_quant_matmul(xp, wq, s)[:case.M, :case.N]
+    ref = quant_matmul_ref(x, wq[:case.K, :case.N], s[:case.N],
+                           out_dtype=x.dtype)
+    return y, ref, DTYPE_TOL[dtype]
+
+
+def _q4_matmul(case, dtype):
+    from repro.kernels.hetero_matmul.ops import (dequant_int4_ref,
+                                                 mxu_q4_matmul,
+                                                 quantize_weight_int4)
+    k1, k2 = jax.random.split(RNG)
+    x = jax.random.normal(k1, (case.M, case.K), dtype)
+    w = jax.random.normal(k2, (case.K, case.N), jnp.float32)
+    wp = pad_to(pad_to(w, ALIGN, 0), ALIGN, 1)       # even K guaranteed
+    wq4, s = quantize_weight_int4(wp)
+    xp = pad_to(pad_to(x, ALIGN, 0), ALIGN, 1)
+    y = mxu_q4_matmul(xp, wq4, s)[:case.M, :case.N]
+    ref = (x.astype(jnp.float32)
+           @ dequant_int4_ref(wq4, s)[:case.K, :case.N]).astype(x.dtype)
+    return y, ref, DTYPE_TOL[dtype]
+
+
+def _flash_attention(case, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    S, D = case.M, min(case.K, ALIGN)     # ragged S; odd K -> odd head dim
+    Hq, Hkv = 4, 2
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (1, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (1, S, Hkv, D), dtype)
+    # ragged S: pad queries AND keys to the block grid. Causal masking makes
+    # the padded keys invisible to the real queries; padded query rows are
+    # sliced off — the same policy the serving path uses for ragged chunks.
+    qp, kp, vp = (pad_to(a, 64, 1) for a in (q, k, v))
+    o = flash_attention(qp, kp, vp, causal=True, block_q=64,
+                        block_k=64)[:, :S]
+    err = rel_err(o, attention_ref(q, k, v, causal=True))
+    if S % 64 == 0:
+        # block-aligned S needs no key padding, so the NON-causal mask path
+        # is exercised too (padded keys would contaminate a non-causal
+        # softmax, hence only on aligned cases — incl. odd-D via odd K)
+        o_nc = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+        err = max(err, rel_err(o_nc, attention_ref(q, k, v, causal=False)))
+    return err, 0.0, DTYPE_TOL[dtype]
+
+
+def _decode_attention(case, dtype):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    Smax, length = 256, min(case.M, 256)  # ragged valid prefix
+    D = min(case.K, ALIGN)                # odd K -> odd head dim (ops pads)
+    Hq, Hkv = 4, 2
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (2, Hq, D), dtype)
+    kc = jax.random.normal(ks[1], (2, Smax, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (2, Smax, Hkv, D), dtype)
+    o = decode_attention(q, kc, vc, length, block_k=128)
+    return o, decode_attention_ref(q, kc, vc, length), DTYPE_TOL[dtype]
+
+
+def _ssm_scan(case, dtype):
+    from repro.kernels.ssm_scan.kernel import ssd_chunk_pallas
+    from repro.kernels.ssm_scan.ref import ssd_chunk_ref
+    L, nh, hd, N = case.M, 2, 64, 64      # ragged chunk length
+    ks = jax.random.split(RNG, 5)
+    cast = lambda a: a.astype(dtype).astype(jnp.float32)  # noqa: E731
+    # kernel contract is f32 operands (ops.py casts); the dtype axis
+    # quantizes the inputs so every grid cell still runs per-dtype data
+    xb = cast(jax.random.normal(ks[0], (2, L, nh, hd)) * 0.5)
+    B_ = cast(jax.random.normal(ks[1], (2, L, N)) * 0.5)
+    C_ = cast(jax.random.normal(ks[2], (2, L, N)) * 0.5)
+    seg = -jnp.cumsum(jnp.abs(cast(jax.random.normal(ks[3], (2, L, nh)))
+                              * 0.1), 1)
+    S_prev = cast(jax.random.normal(ks[4], (2, nh, hd, N)) * 0.3)
+    y1, s1 = ssd_chunk_pallas(xb, B_, C_, seg, S_prev)
+    y2, s2 = ssd_chunk_ref(xb, B_, C_, seg, S_prev)
+    err = max(rel_err(y1, y2), rel_err(s1, s2))
+    return err, 0.0, 1e-4                 # pre-reduced: compare err to tol
+
+
+KERNELS = {
+    "hetero_matmul/mxu": _matmul,
+    "hetero_matmul/quant_int8": _quant_matmul,
+    "hetero_matmul/q4_w4a16": _q4_matmul,
+    "flash_attention": _flash_attention,
+    "decode_attention": _decode_attention,
+    "ssm_scan": _ssm_scan,
+}
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("dtype", CONFORMANCE_DTYPES)
+@pytest.mark.parametrize("case", CONFORMANCE_CASES, ids=lambda c: c.name)
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_kernel_conformance(kernel, case, dtype):
+    """Every kernel package x every shape edge case x every dtype: the
+    Pallas kernel must agree with its ref.py oracle within the dtype's
+    output-rounding tolerance."""
+    got, want, tol = KERNELS[kernel](case, dtype)
+    if isinstance(got, float):            # adapter pre-reduced to an error
+        assert got < tol, f"{kernel}/{case.name}/{dtype}: err {got} >= {tol}"
+    else:
+        err = rel_err(got, want)
+        assert err < tol, f"{kernel}/{case.name}/{dtype}: err {err} >= {tol}"
+
+
+# ------------------------------------------------- quantization accuracy ---
+# (kernel-independent properties of the two weight formats; the parity of
+# the kernels against the dequant oracle is covered by the grid above)
+
+@pytest.mark.tier1
+def test_int8_quantization_error_bound():
+    from repro.kernels.hetero_matmul.ops import quantize_weight
+    from repro.kernels.hetero_matmul.ref import matmul_ref, quant_matmul_ref
+    k1, k2 = jax.random.split(RNG)
+    x = jax.random.normal(k1, (128, 256), jnp.float32)
+    w = jax.random.normal(k2, (256, 128), jnp.float32)
+    wq, s = quantize_weight(w)
+    assert rel_err(quant_matmul_ref(x, wq, s), matmul_ref(x, w)) < 0.05
+
+
+@pytest.mark.tier1
+def test_int4_quantization_error_bound():
+    from repro.kernels.hetero_matmul.ops import (dequant_int4_ref,
+                                                 quantize_weight_int4)
+    k1, k2 = jax.random.split(RNG)
+    x = jax.random.normal(k1, (128, 256), jnp.float32)
+    w = jax.random.normal(k2, (256, 128), jnp.float32)
+    wq4, s = quantize_weight_int4(w)
+    assert rel_err(x @ dequant_int4_ref(wq4, s), x @ w) < 0.15

@@ -1,0 +1,186 @@
+"""Stage-parallel mixed batching (prefill⊕decode fusion).
+
+Contracts under test, mirroring the serving invariant (fusion is an
+execution-schedule change, never a numerics change):
+
+  * ``transformer.mixed_step`` — one dispatch running decode lanes + a
+    prefill chunk — is BIT-exact against running the two stages
+    sequentially on the same pool (disjoint block tables);
+  * the chunk-carrying ``paged_decode_window`` emits the same decode
+    tokens as a plain window and the same chunk logits as a standalone
+    prefill;
+  * the mixed-batch ``PagedBatcher`` generates token-identical greedy
+    outputs while issuing strictly fewer host dispatches per finished
+    token than admit-then-decode, never stalling decode during admission.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import PagedBatcher, Request
+
+W, BS, NBMAX = 2, 16, 8
+
+# smoke_model: session-scoped fixture from conftest.py
+
+
+def _pool_and_tables(model):
+    """A pool with two decode lanes (blocks 1-2, 3-4) and one admitting
+    sequence (blocks 5-6) — disjoint by construction, like the allocator
+    guarantees."""
+    pool = model.init_paged_cache(num_blocks=9, block_size=BS,
+                                  dtype=jnp.float32)
+    dec_tables = np.zeros((W, NBMAX), np.int32)
+    dec_tables[0, :2] = [1, 2]
+    dec_tables[1, :2] = [3, 4]
+    pre_table = np.zeros((1, NBMAX), np.int32)
+    pre_table[0, :2] = [5, 6]
+    return pool, jnp.asarray(dec_tables), jnp.asarray(pre_table)
+
+
+def _warm_pool(model, params, pool, dec_tables, rng, lengths):
+    """Prefill each decode lane's history so the fused step reads real KV."""
+    for i, ln in enumerate(lengths):
+        toks = rng.integers(0, model.cfg.vocab_size, ln).astype(np.int32)
+        _, pool = model.paged_prefill(params, jnp.asarray(toks)[None], pool,
+                                      block_table=dec_tables[i:i + 1])
+    return pool
+
+
+def test_mixed_step_bit_exact_vs_sequential(smoke_model):
+    """ONE fused dispatch == decode step then prefill chunk, bit for bit:
+    decode logits, chunk logits AND the shared pool write."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(0)
+    pool, dec_tables, pre_table = _pool_and_tables(model)
+    lengths = np.asarray([13, 7], np.int32)
+    pool = _warm_pool(model, params, pool, dec_tables, rng, lengths)
+
+    last = jnp.asarray(rng.integers(0, cfg.vocab_size, (W, 1)), jnp.int32)
+    chunk = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 21)), jnp.int32)
+
+    d_logits, pool_a = model.paged_decode_step(
+        params, last, pool, block_tables=dec_tables,
+        lengths=jnp.asarray(lengths))
+    p_logits, pool_a = model.paged_prefill(
+        params, chunk, pool_a, block_table=pre_table)
+
+    dm, pm, pool_b = model.mixed_step(
+        params, last, chunk, pool, decode_tables=dec_tables,
+        decode_lengths=jnp.asarray(lengths), prefill_table=pre_table)
+
+    assert np.array_equal(np.asarray(dm), np.asarray(d_logits))
+    assert np.array_equal(np.asarray(pm), np.asarray(p_logits))
+    for t in ("k", "v"):
+        assert np.array_equal(np.asarray(pool_b[t]), np.asarray(pool_a[t]))
+
+
+def test_window_carries_prefill_chunk(smoke_model):
+    """A chunk-carrying fused window: decode tokens identical to the plain
+    window, chunk logits identical to a standalone prefill — one dispatch
+    instead of two."""
+    from repro.core.sync import paged_decode_window
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(1)
+    pool, dec_tables, pre_table = _pool_and_tables(model)
+    lengths = np.asarray([9, 17], np.int32)
+    pool = _warm_pool(model, params, pool, dec_tables, rng, lengths)
+    last = jnp.asarray(rng.integers(0, cfg.vocab_size, (W, 1)), jnp.int32)
+    chunk = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 14)), jnp.int32)
+    remaining = jnp.asarray([3, 2], jnp.int32)
+    key = jax.random.PRNGKey(3)
+
+    def pool_copy():
+        return {t: jnp.array(pool[t]) for t in ("k", "v")}
+
+    toks_a, valid_a, pool_plain, _, _ = paged_decode_window(
+        model, params, last, pool_copy(), dec_tables,
+        jnp.asarray(lengths), remaining, key, 3)
+    p_logits, _ = model.paged_prefill(params, chunk, pool_copy(),
+                                      block_table=pre_table)
+
+    toks_b, valid_b, pre_logits, _, _, _ = paged_decode_window(
+        model, params, last, pool_copy(), dec_tables,
+        jnp.asarray(lengths), remaining, key, 3,
+        prefill_tokens=chunk, prefill_table=pre_table)
+
+    assert np.array_equal(np.asarray(toks_a), np.asarray(toks_b))
+    assert np.array_equal(np.asarray(valid_a), np.asarray(valid_b))
+    assert np.array_equal(np.asarray(pre_logits), np.asarray(p_logits))
+
+
+def _staggered_run(cfg, params, prompts, budgets, gap=2, **kw):
+    """Submit one request every ``gap`` ticks so later admissions happen
+    while earlier requests decode (the fusion regime)."""
+    max_len = max(len(p) for p in prompts) + max(budgets)
+    n = len(prompts)
+    pb = PagedBatcher(cfg, params,
+                      num_blocks=1 + n * -(-max_len // BS), block_size=BS,
+                      max_blocks_per_seq=-(-max_len // BS),
+                      decode_width=n, buckets=(32, 64),
+                      cache_dtype=jnp.float32, **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=m)
+            for i, (p, m) in enumerate(zip(prompts, budgets))]
+    pending = list(reqs)
+    tick = 0
+    while pending or pb.busy:
+        if pending and tick % gap == 0:
+            pb.submit(pending.pop(0))
+        pb.step()
+        tick += 1
+        assert tick < 1000
+    pb.kv.assert_drained()
+    return reqs, pb
+
+
+@pytest.mark.parametrize("sync,kw", [("host", {}),
+                                     ("device", {"window": 3})])
+def test_mixed_batcher_fewer_dispatches_token_exact(smoke_model, sync, kw):
+    """The acceptance property end to end: under staggered arrivals the
+    mixed arm emits identical greedy streams with strictly fewer host
+    dispatches per finished token, admission chunks actually fuse, and no
+    standalone prefill dispatch happens while lanes are decoding."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (41, 33, 57, 20)]
+    budgets = [9, 7, 8, 6]
+
+    base_reqs, base = _staggered_run(cfg, params, prompts, budgets,
+                                     sync=sync, **kw)
+    mix_reqs, mix = _staggered_run(cfg, params, prompts, budgets,
+                                   sync=sync, mixed_batch=True, **kw)
+    for b, m in zip(base_reqs, mix_reqs):
+        assert b.output == m.output and b.done and m.done
+    tokens = sum(len(r.output) for r in base_reqs)
+    assert tokens == sum(len(r.output) for r in mix_reqs)
+    assert mix.fused_steps > 0
+    assert mix.total_dispatches < base.total_dispatches, \
+        (sync, mix.total_dispatches, base.total_dispatches)
+    # decode never stalls: both arms decode the same number of steps, and
+    # only the FIRST request (empty server) paid standalone prefill
+    # dispatches — every later chunk rode a decode dispatch
+    assert mix.decode_steps == base.decode_steps == sum(budgets) - len(budgets)
+    first_chunks = 2                     # 41 tokens -> chunks (32, 9)
+    assert mix.prefill_dispatches == first_chunks
+    assert mix.fused_steps == base.prefill_dispatches - first_chunks
+
+
+def test_mixed_chunk_cap(smoke_model):
+    """``max_prefill_chunk_per_step`` bounds the compute fused per step:
+    capping at 16 splits a 41-token prompt into ceil(41/16)=3 chunks, all
+    token-exact."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (41, 26)]
+    budgets = [5, 4]
+    base_reqs, _ = _staggered_run(cfg, params, prompts, budgets, sync="host")
+    mix_reqs, mix = _staggered_run(cfg, params, prompts, budgets,
+                                   sync="host", mixed_batch=True,
+                                   max_prefill_chunk_per_step=16)
+    for b, m in zip(base_reqs, mix_reqs):
+        assert b.output == m.output
+    # 41 -> (16, 16, 9), 26 -> (16, 10): 5 chunks total across both paths
+    assert mix.prefill_dispatches + mix.fused_steps == 5

@@ -1,0 +1,85 @@
+"""PartitionSolver property tests (paper §4.2/§4.4 invariants).
+
+Seeded sweeps over (arch, site, M):
+  * the chosen strategy is never worse than running everything on the
+    flexible path (`xla_only` is always a candidate, so `solve_site` is a
+    min over a set containing it);
+  * every weight/hybrid split point is 128-aligned and strictly inside
+    (0, N) — the MXU path physically cannot run a misaligned column block;
+  * MIXED (stage-parallel serving pair) decisions beat serializing the two
+    stages whenever the solver reports a gain, and plans round-trip
+    through save/load to EQUAL decisions, mixed included.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core.profiler import profile_analytic
+from repro.core.solver import ALIGN, PartitionPlan, PartitionSolver
+
+ARCHS = ("llama3-8b", "qwen2-moe-a2.7b", "tinyllama-1.1b")
+MS = (1, 7, 64, 100, 128, 192, 300, 511, 512, 1000, 2048)
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def solver(request):
+    cfg = get_config(request.param)
+    return cfg, PartitionSolver(profile_analytic(cfg), sync_mode="fast")
+
+
+@pytest.mark.tier1
+def test_best_never_worse_than_xla_only(solver):
+    cfg, s = solver
+    for site in s.table.sites:
+        for M in MS:
+            dec = s.solve_site(site, M)
+            t_xla = s.table.lookup(site, M, "xla")
+            assert dec.t_us <= t_xla + 1e-9, \
+                f"{cfg.name}/{site}/M={M}: {dec.describe()} vs xla {t_xla}"
+
+
+@pytest.mark.tier1
+def test_split_points_aligned_and_interior(solver):
+    cfg, s = solver
+    for site in s.table.sites:
+        _, N = s.table.sites[site]
+        for M in MS:
+            dec = s.solve_site(site, M)
+            if dec.strategy in ("weight", "hybrid"):
+                assert dec.n_split % ALIGN == 0, dec.describe()
+                assert 0 < dec.n_split < N, dec.describe()
+            if dec.strategy in ("act", "hybrid"):
+                assert 0 < dec.m_bucket < M, dec.describe()
+
+
+@pytest.mark.tier1
+def test_mixed_pair_consistency(solver):
+    """MIXED decisions: strategy tag, prefill bucket recorded, and the
+    fused latency never exceeds serializing the two single-stream stages
+    (combine_dual over a superset of each stream's bandwidth)."""
+    cfg, s = solver
+    for site in list(s.table.sites)[:4]:
+        for (mp, md) in ((64, 4), (128, 8), (256, 8)):
+            dec = s.solve_mixed(site, mp, md)
+            assert dec.strategy == "mixed" and dec.m_bucket == mp
+            assert dec.M == mp + md
+            assert s.mixed_gain_us(site, mp, md) >= 0.0, dec.describe()
+
+
+@pytest.mark.tier1
+def test_plan_roundtrip_equal_decisions(solver, tmp_path):
+    """save/load -> EQUAL Decision dataclasses for every (site, M) and
+    every mixed (site, m_prefill, m_decode) key, plus kv_mode/sync_mode."""
+    cfg, s = solver
+    plan = s.solve(cfg, Ms=(1, 100, 256), mixed_pairs=((64, 4), (256, 8)))
+    assert plan.mixed_decisions, "mixed_pairs produced no MIXED decisions"
+    p = tmp_path / "plan.json"
+    plan.save(p)
+    plan2 = PartitionPlan.load(p)
+    assert plan2.arch == plan.arch and plan2.sync_mode == plan.sync_mode
+    assert plan2.kv_mode == plan.kv_mode
+    assert plan2.decisions == plan.decisions
+    assert plan2.mixed_decisions == plan.mixed_decisions
+    for key, dec in plan2.mixed_decisions.items():
+        site, mp, md = key
+        assert dec.strategy == "mixed"
+        assert plan2.mixed_decision(site, mp, md) == dec
