@@ -12,7 +12,7 @@ from repro.core.characteristics import (combine_dual, compile_time_model_us,
 from repro.core.profiler import profile_analytic
 from repro.core.solver import PartitionSolver
 
-from .common import emit
+from .common import emit, emit_json
 
 S = 320
 
@@ -55,6 +55,8 @@ def main() -> None:
     het_h = sum(solver_h.solve_site(s, S).t_us for s in sites) * L
     emit("fig18_ablation/fast_sync_final", het,
          f"{het_h/het:.2f}x from sync alone")
+
+    emit_json("ablation")
 
 
 if __name__ == "__main__":

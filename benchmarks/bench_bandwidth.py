@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.core.characteristics import V5E
 
-from .common import bench, emit
+from .common import bench, emit, emit_json
 
 
 def main() -> None:
@@ -37,6 +37,8 @@ def main() -> None:
     emit("fig5_bw_measured/one_stream", t1, f"GBs={bw1:.1f}")
     emit("fig5_bw_measured/two_streams", t2,
          f"GBs={bw2:.1f},aggregation={bw2/bw1:.2f}x")
+
+    emit_json("bandwidth")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.characteristics import mxu_matmul_time_us, xla_matmul_time_us
 
-from .common import bench, emit
+from .common import bench, emit, emit_json
 
 
 def main() -> None:
@@ -44,6 +44,8 @@ def main() -> None:
     for m in (64, 128, 256, 512, 1024):
         x = jax.random.normal(rng, (m, 1024), jnp.float32)
         emit(f"fig1_xla_measured/M={m}", bench(xla_mm, x, w), "cpu-backend")
+
+    emit_json("characteristics")
 
 
 if __name__ == "__main__":

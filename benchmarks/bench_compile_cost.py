@@ -10,7 +10,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from .common import emit
+from .common import emit, emit_json
 
 
 def main() -> None:
@@ -25,6 +25,8 @@ def main() -> None:
         jax.jit(f).lower(x, w).compile()
         dt = (time.perf_counter() - t0) * 1e6
         emit(f"fig8_compile_cost/M={m}", dt, "per-novel-shape")
+
+    emit_json("compile_cost")
 
 
 if __name__ == "__main__":

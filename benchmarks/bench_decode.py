@@ -12,7 +12,7 @@ from repro.core.characteristics import V5E
 from repro.core.profiler import profile_analytic
 from repro.core.solver import PartitionSolver
 
-from .common import emit
+from .common import emit, emit_json
 
 
 def main() -> None:
@@ -42,6 +42,8 @@ def main() -> None:
                      if v in ("weight", "act", "hybrid"))
         emit(f"fig15_decode_model/{arch}/partitioned_sites", 0.0,
              f"{n_part}/{len(strategies)}")
+
+    emit_json("decode")
 
 
 if __name__ == "__main__":

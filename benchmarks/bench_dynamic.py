@@ -16,7 +16,7 @@ from repro.core.engine import InferenceEngine
 from repro.core.profiler import STANDARD_BUCKETS, profile_analytic
 from repro.core.solver import PartitionSolver
 
-from .common import emit
+from .common import emit, emit_json
 
 SEQS = (135, 300, 525, 1000)
 
@@ -79,6 +79,8 @@ def measured_arm():
 def main() -> None:
     analytic_arm()
     measured_arm()
+
+    emit_json("dynamic")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ from repro.core.engine import InferenceEngine
 from repro.core.profiler import profile_analytic
 from repro.core.solver import PartitionSolver
 
-from .common import emit
+from .common import emit, emit_json
 
 WORKLOADS = {            # Table 4
     "dialogue": (54, 374),
@@ -67,6 +67,8 @@ def main() -> None:
         emit(f"fig12_e2e_measured/dialogue/{mode}",
              (eng.stats.prefill_s + eng.stats.decode_s) * 1e6,
              f"fast_sync={fast}")
+
+    emit_json("e2e")
 
 
 if __name__ == "__main__":

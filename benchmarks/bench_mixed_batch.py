@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_json
 from repro.configs import get_smoke_config
 from repro.core.profiler import profile_analytic
 from repro.core.solver import PartitionSolver
@@ -94,25 +94,27 @@ def main() -> None:
         kw = {"sync": sync} if sync == "host" else \
              {"sync": sync, "window": WINDOW}
         reqs_b, dt_b, base = _run_staggered(cfg, params, **kw)
+        bs = base.stats()
         tokens = sum(len(r.output) for r in reqs_b)
         emit(f"mixed_batch.{sync}.admit_then_decode", dt_b * 1e6,
-             f"dispatches={base.total_dispatches};tokens={tokens};"
-             f"disp_per_tok={base.total_dispatches / tokens:.3f}")
+             f"dispatches={bs['total_dispatches']};tokens={tokens};"
+             f"disp_per_tok={bs['total_dispatches'] / tokens:.3f}")
         reqs_m, dt_m, mixed = _run_staggered(cfg, params, mixed_batch=True,
                                              **kw)
+        ms = mixed.stats()
         match = all(b.output == m.output for b, m in zip(reqs_b, reqs_m))
         emit(f"mixed_batch.{sync}.mixed", dt_m * 1e6,
-             f"dispatches={mixed.total_dispatches};tokens={tokens};"
-             f"disp_per_tok={mixed.total_dispatches / tokens:.3f};"
-             f"fused_chunks={mixed.fused_steps};"
-             f"standalone_prefill={mixed.prefill_dispatches};match={match}")
+             f"dispatches={ms['total_dispatches']};tokens={tokens};"
+             f"disp_per_tok={ms['total_dispatches'] / tokens:.3f};"
+             f"fused_chunks={ms['fused_steps']};"
+             f"standalone_prefill={ms['prefill_dispatches']};match={match}")
         assert match, (f"sync={sync}: mixed-batch greedy outputs diverged "
                        "from admit-then-decode")
-        assert mixed.fused_steps > 0, \
+        assert ms["fused_steps"] > 0, \
             f"sync={sync}: no prefill chunk ever fused into a decode dispatch"
-        assert mixed.total_dispatches < base.total_dispatches, (
-            f"sync={sync}: mixed arm issued {mixed.total_dispatches} "
-            f"dispatches vs {base.total_dispatches} for admit-then-decode; "
+        assert ms["total_dispatches"] < bs["total_dispatches"], (
+            f"sync={sync}: mixed arm issued {ms['total_dispatches']} "
+            f"dispatches vs {bs['total_dispatches']} for admit-then-decode; "
             "expected strictly fewer per finished token")
 
     # the solver's analytic account of the same fusion (full-size model):
@@ -127,6 +129,8 @@ def main() -> None:
         emit(f"mixed_batch.solver.{site}", dec.t_us,
              f"strategy={dec.strategy};ratio={dec.ratio};"
              f"gain_vs_serial_us={gain:.1f}")
+
+    emit_json("mixed_batch")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_json
 from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.serving.scheduler import ContinuousBatcher, PagedBatcher, Request
@@ -81,6 +81,8 @@ def main() -> None:
     assert paged.peak_active > dense.peak_active, (
         f"paged peak {paged.peak_active} <= dense peak {dense.peak_active} "
         "at equal memory")
+
+    emit_json("paged")
 
 
 if __name__ == "__main__":

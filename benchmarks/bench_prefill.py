@@ -14,7 +14,7 @@ from repro.core.engine import InferenceEngine
 from repro.core.profiler import profile_analytic
 from repro.core.solver import PartitionSolver
 
-from .common import emit
+from .common import emit, emit_json
 
 SEQ_LENS = (64, 256, 1024)
 
@@ -56,6 +56,8 @@ def main() -> None:
     for arch in ("llama3-8b", "internlm-1.8b", "tinyllama-1.1b"):
         analytic_arm(arch)
     measured_arm()
+
+    emit_json("prefill")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_json
 from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.serving.scheduler import PagedBatcher, Request
@@ -65,27 +65,32 @@ def main() -> None:
 
     for n_reqs in (2, 4):
         reqs_h, dt_h, host = _run(cfg, params, n_reqs, sync="host")
+        hs = host.stats()
         tok_h = sum(len(r.output) for r in reqs_h)
         emit(f"serve_sync.B{n_reqs}.host", dt_h * 1e6,
-             f"dispatches={host.decode_dispatches};"
-             f"decode_tokens={host.decode_steps};tok_s={tok_h / dt_h:.1f}")
+             f"dispatches={hs['decode_dispatches']};"
+             f"decode_tokens={hs['decode_steps']};tok_s={tok_h / dt_h:.1f}")
         for window in (4, 8):
             reqs_d, dt_d, dev = _run(cfg, params, n_reqs, sync="device",
                                      window=window)
+            ds = dev.stats()
             match = all(h.output == d.output
                         for h, d in zip(reqs_h, reqs_d))
             tok_d = sum(len(r.output) for r in reqs_d)
-            saved = host.decode_dispatches - dev.decode_dispatches
+            saved = hs["decode_dispatches"] - ds["decode_dispatches"]
             emit(f"serve_sync.B{n_reqs}.device.w{window}", dt_d * 1e6,
-                 f"dispatches={dev.decode_dispatches};"
-                 f"decode_tokens={dev.decode_steps};tok_s={tok_d / dt_d:.1f};"
+                 f"dispatches={ds['decode_dispatches']};"
+                 f"decode_tokens={ds['decode_steps']};"
+                 f"tok_s={tok_d / dt_d:.1f};"
                  f"dispatches_saved={saved};match={match}")
             assert match, (f"B={n_reqs} w={window}: fused-window greedy "
                            "outputs diverged from host-synced arm")
             assert saved >= window, (
                 f"B={n_reqs} w={window}: fused arm saved only {saved} "
-                f"dispatches ({host.decode_dispatches} -> "
-                f"{dev.decode_dispatches}); expected >= {window}")
+                f"dispatches ({hs['decode_dispatches']} -> "
+                f"{ds['decode_dispatches']}); expected >= {window}")
+
+    emit_json("serve_sync")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ from repro.core.characteristics import V5E
 from repro.core.profiler import LatencyTable
 from repro.core.solver import PartitionSolver
 
-from .common import emit
+from .common import emit, emit_json
 
 PAPER_ROWS = [
     # (K, N, M) — [weight shape], activation tokens (paper Table 3)
@@ -32,6 +32,8 @@ def main() -> None:
         d = solver.solve_site(f"w{K}x{N}", M)
         emit(f"table3/[{K}x{N}]xM{M}", d.t_us,
              f"{d.strategy}({d.ratio})")
+
+    emit_json("solver_table")
 
 
 if __name__ == "__main__":

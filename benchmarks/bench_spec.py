@@ -1,0 +1,149 @@
+"""Speculative decoding vs plain paged decode (spec tentpole).
+
+Decode pays one target-model dispatch per token (sync='host') or per
+window (sync='device'); its M=1-per-lane matmuls are stuck on the
+memory-bound flexible path. Speculative decoding (serving/spec.py +
+``PagedBatcher(spec=...)``) converts the same token stream into rounds:
+K cheap draft proposals per lane, then ONE ``paged_verify`` target
+dispatch scoring all K+1 positions — an M = lanes*(K+1) matmul the
+partition solver plans via its VERIFY site class. Greedy verification is
+lossless, so the spec arms must be BIT-EXACT against the non-spec arms;
+the win is strictly fewer target dispatches per emitted token.
+
+Arms, for each sync in {host, device} and K in {2, 4}:
+  * baseline — non-spec PagedBatcher (per-token dispatches under host
+    sync, fused windows of ``WINDOW`` under device sync);
+  * spec.k<K> — self-speculation (the target drafts for itself): the
+    acceptance-rate upper bound, every round emits K+1 tokens per lane.
+    Asserted: bit-exact outputs AND strictly fewer target dispatches per
+    emitted token than the baseline, acceptance counters via ``stats()``;
+  * spec.k<K>.indep — an INDEPENDENT draft model (smollm smoke config —
+    two models in one serving process): still bit-exact by construction,
+    acceptance reported, no dispatch assertion (a random-init draft earns
+    ~zero acceptance; it demonstrates robustness, not speed).
+
+Plus the solver's analytic account (full-size llama3-8b): the VERIFY
+decision per site and ``verify_gain_us`` — one M = lanes*(K+1) dispatch vs
+K+1 M = lanes dispatches each paying T_sync.
+
+Rows: ``spec.<sync>.<arm>,us_total,...`` + ``spec.solver.<site>`` rows;
+headline numbers land in ``BENCH_spec.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from repro.configs import get_config, get_smoke_config
+from repro.core.profiler import profile_analytic
+from repro.core.solver import PartitionSolver
+from repro.models import build_model
+from repro.serving.scheduler import PagedBatcher, Request
+from repro.serving.spec import SpecConfig
+
+BLOCK_SIZE = 16
+NEW_TOKENS = 21                       # 20 decode steps per request
+PROMPT_SIZES = (24, 40, 17, 56)
+WINDOW = 2                            # non-spec device-sync window
+
+
+def _requests(cfg) -> list[Request]:
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, s).astype(np.int32),
+                    max_new_tokens=NEW_TOKENS)
+            for i, s in enumerate(PROMPT_SIZES)]
+
+
+def _run(cfg, params, **kw) -> tuple[list[Request], float, PagedBatcher]:
+    max_len = max(PROMPT_SIZES) + NEW_TOKENS
+    n = len(PROMPT_SIZES)
+    pb = PagedBatcher(cfg, params,
+                      num_blocks=1 + n * -(-max_len // BLOCK_SIZE),
+                      block_size=BLOCK_SIZE,
+                      max_blocks_per_seq=-(-max_len // BLOCK_SIZE),
+                      decode_width=n, buckets=(32, 64),
+                      cache_dtype=jnp.float32, **kw)
+    reqs = _requests(cfg)
+    t0 = time.perf_counter()
+    pb.run(reqs)
+    dt = time.perf_counter() - t0
+    pb.kv.assert_drained()
+    return reqs, dt, pb
+
+
+def main() -> None:
+    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
+                                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    indep_draft = get_smoke_config("smollm-135m").with_(
+        param_dtype="float32", compute_dtype="float32")
+    headline = {}
+
+    for sync in ("host", "device"):
+        kw = {"sync": sync} if sync == "host" else \
+             {"sync": sync, "window": WINDOW}
+        reqs_b, dt_b, base = _run(cfg, params, **kw)
+        bs = base.stats()
+        tokens = sum(len(r.output) for r in reqs_b)
+        emit(f"spec.{sync}.baseline", dt_b * 1e6,
+             f"target_dispatches={bs['total_dispatches']};tokens={tokens};"
+             f"disp_per_tok={bs['total_dispatches'] / tokens:.3f}")
+        for k in (2, 4):
+            reqs_s, dt_s, spec = _run(cfg, params, spec=SpecConfig(k=k),
+                                      **kw)
+            ss = spec.stats()
+            match = all(b.output == s.output
+                        for b, s in zip(reqs_b, reqs_s))
+            emit(f"spec.{sync}.k{k}", dt_s * 1e6,
+                 f"target_dispatches={ss['target_dispatches']};"
+                 f"tokens={tokens};"
+                 f"disp_per_tok={ss['target_dispatches'] / tokens:.3f};"
+                 f"verify={ss['verify_dispatches']};"
+                 f"accept_rate={ss['acceptance_rate']:.2f};match={match}")
+            assert match, (f"sync={sync} k={k}: speculative greedy outputs "
+                           "diverged from the non-spec arm")
+            assert ss["target_dispatches"] < bs["total_dispatches"], (
+                f"sync={sync} k={k}: spec arm issued "
+                f"{ss['target_dispatches']} target dispatches vs "
+                f"{bs['total_dispatches']} baseline; expected strictly "
+                "fewer per emitted token")
+            assert ss["acceptance_rate"] > 0.0 and ss["spec_rounds"] > 0
+            headline[f"{sync}.k{k}"] = {
+                "target_dispatches": ss["target_dispatches"],
+                "baseline_dispatches": bs["total_dispatches"],
+                "tokens": tokens,
+                "acceptance_rate": round(ss["acceptance_rate"], 3),
+            }
+        # independent draft model: two models in one serving process —
+        # correctness is draft-agnostic, acceptance is reported not asserted
+        reqs_i, dt_i, indep = _run(
+            cfg, params, spec=SpecConfig(k=4, draft=indep_draft), **kw)
+        si = indep.stats()
+        match = all(b.output == s.output for b, s in zip(reqs_b, reqs_i))
+        emit(f"spec.{sync}.k4.indep", dt_i * 1e6,
+             f"draft={si['draft_model']};"
+             f"target_dispatches={si['target_dispatches']};"
+             f"accept_rate={si['acceptance_rate']:.2f};match={match}")
+        assert match, (f"sync={sync}: independent-draft outputs diverged "
+                       "from the non-spec arm")
+
+    # the solver's analytic account (full-size model): VERIFY site class
+    full = get_config("llama3-8b")
+    solver = PartitionSolver(profile_analytic(full), sync_mode="host")
+    for site in ("wq", "w_gate", "head"):
+        dec = solver.solve_verify(site, 4, lanes=8)
+        gain = solver.verify_gain_us(site, 4, lanes=8)
+        emit(f"spec.solver.{site}", dec.t_us,
+             f"strategy={dec.strategy};ratio={dec.ratio};"
+             f"gain_vs_serial_us={gain:.1f}")
+    emit_json("spec", headline)
+
+
+if __name__ == "__main__":
+    main()

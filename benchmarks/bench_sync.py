@@ -18,7 +18,7 @@ from repro.core.sync import (generate_host_loop, generate_on_device,
                              measure_dispatch_overhead)
 from repro.models import build_model
 
-from .common import emit
+from .common import emit, emit_json
 
 
 def main() -> None:
@@ -52,6 +52,8 @@ def main() -> None:
              f"tok_s={1e6/t_fast:.1f}")
         emit(f"fig17_sync/{arch}/host", t_host,
              f"tok_s={1e6/t_host:.1f},fast_speedup={t_host/t_fast:.2f}x")
+
+    emit_json("sync")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,31 @@
 """Shared benchmark utilities. Every benchmark prints CSV rows
-``name,us_per_call,derived`` so benchmarks.run can aggregate them."""
+``name,us_per_call,derived`` (``emit``) so benchmarks.run can aggregate
+them, and finishes with ``emit_json(<bench>)`` so the same rows land in a
+machine-readable ``BENCH_<bench>.json`` at the repo root — the perf
+trajectory artifact CI and the aggregator (`benchmarks/run.py`) consume."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# rows emitted since the last emit_json() call: emit() records every CSV row
+# here so benches don't have to thread their results twice
+_ROWS: list[dict] = []
+# files emit_json() wrote during THIS process — what run.py aggregates, so
+# stale artifacts from earlier runs or removed benches are never folded in
+_WRITTEN: list[Path] = []
+
+
+def reset_rows() -> None:
+    """Drop rows buffered by a failed bench so the next module's
+    ``emit_json`` can't misattribute them (run.py calls this on failure)."""
+    _ROWS.clear()
 
 
 def bench(fn, *args, repeats: int = 5, warmup: int = 1) -> float:
@@ -22,3 +42,18 @@ def bench(fn, *args, repeats: int = 5, warmup: int = 1) -> float:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us": round(float(us), 1),
+                  "derived": derived})
+
+
+def emit_json(name: str, metrics: dict | None = None) -> Path:
+    """Write ``BENCH_<name>.json`` at the repo root: every ``emit()`` row
+    since the previous ``emit_json()`` plus optional headline ``metrics``
+    (the numbers a trajectory plot would track). Returns the path."""
+    global _ROWS
+    rows, _ROWS = _ROWS, []
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(
+        {"bench": name, "metrics": metrics or {}, "rows": rows}, indent=1))
+    _WRITTEN.append(path)
+    return path

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from repro.roofline.analysis import analyze_all
 
-from .common import emit
+from .common import emit, emit_json
 
 
 def main() -> None:
@@ -18,6 +18,8 @@ def main() -> None:
                  f"dom={c.dominant},comp_ms={c.compute_s*1e3:.2f},"
                  f"mem_ms={c.memory_s*1e3:.2f},coll_ms={c.collective_s*1e3:.2f},"
                  f"useful={c.useful_ratio:.2f},roofline_frac={c.roofline_fraction:.2f}")
+
+    emit_json("roofline")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,17 @@
 """Benchmark aggregator: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit)."""
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit). Each
+module also writes its machine-readable ``BENCH_<name>.json`` at the repo
+root (common.emit_json); after the sweep this aggregator folds them into
+``BENCH_summary.json`` — the perf-trajectory artifact."""
 from __future__ import annotations
 
 import importlib
+import json
 import sys
 import traceback
+
+from benchmarks import common
+from benchmarks.common import REPO_ROOT
 
 MODULES = [
     "benchmarks.bench_characteristics",   # Figs 1/3/4
@@ -20,8 +27,25 @@ MODULES = [
     "benchmarks.bench_paged",             # paged vs dense KV at equal memory
     "benchmarks.bench_serve_sync",        # host-synced vs fused-window decode
     "benchmarks.bench_mixed_batch",       # stage-parallel prefill⊕decode fusion
+    "benchmarks.bench_spec",              # speculative decoding vs plain decode
     "benchmarks.roofline_report",         # §Roofline
 ]
+
+
+def aggregate() -> dict:
+    """Fold the BENCH_<name>.json files written during THIS run into one
+    summary dict and write BENCH_summary.json. Only files emit_json()
+    produced this process count — a failed bench, or a stale artifact from
+    an earlier run or a removed bench, is never folded in."""
+    benches = {}
+    for path in common._WRITTEN:
+        data = json.loads(path.read_text())
+        benches[data["bench"]] = {"metrics": data["metrics"],
+                                  "n_rows": len(data["rows"])}
+    summary = {"benches": benches, "n_benches": len(benches)}
+    (REPO_ROOT / "BENCH_summary.json").write_text(
+        json.dumps(summary, indent=1))
+    return summary
 
 
 def main() -> None:
@@ -34,6 +58,11 @@ def main() -> None:
             failures.append((name, e))
             print(f"# {name} FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+            common.reset_rows()   # don't leak this bench's rows into the
+            #                       next module's BENCH_<name>.json
+    summary = aggregate()
+    print(f"# ---- aggregate: {summary['n_benches']} BENCH_*.json -> "
+          "BENCH_summary.json ----")
     if failures:
         sys.exit(1)
 

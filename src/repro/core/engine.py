@@ -36,24 +36,29 @@ from .sync import generate_host_loop, generate_on_device
 
 
 def build_plan(cfg, *, sync_mode: str = "fast",
-               table: Optional[LatencyTable] = None, mixed_pairs=()
-               ) -> tuple[LatencyTable, PartitionPlan]:
+               table: Optional[LatencyTable] = None, mixed_pairs=(),
+               verify_ks=()) -> tuple[LatencyTable, PartitionPlan]:
     """Offline phase (paper Fig 11 left half): profile the model's weight
     shapes, then solve the per-(site, M) partitioning decisions. Shared by
     the single-stream engine and the paged serving scheduler so both run
     the SAME solver-planned execution. ``mixed_pairs``: (prefill chunk,
     decode width) pairs the mixed-batch scheduler will fuse — solved into
-    ``plan.mixed_decisions`` (strategy MIXED)."""
+    ``plan.mixed_decisions`` (strategy MIXED). ``verify_ks``: (k, lanes)
+    speculative-verification shapes the spec decoder will dispatch —
+    solved into ``plan.verify_decisions`` (the VERIFY site class)."""
     table = table or profile_analytic(cfg)
     solver = PartitionSolver(table, sync_mode=sync_mode)
-    return table, solver.solve(cfg, mixed_pairs=mixed_pairs)
+    return table, solver.solve(cfg, mixed_pairs=mixed_pairs,
+                               verify_ks=verify_ks)
 
 
 def build_hetero_ctx(cfg, mode: str, *, sync_mode: str = "fast",
-                     interpret: bool = True, mixed_pairs=()) -> HeteroCtx:
+                     interpret: bool = True, mixed_pairs=(),
+                     verify_ks=()) -> HeteroCtx:
     """Profile + solve + wrap in the HeteroCtx that models thread through
     every matmul site (including the LM head)."""
-    _, plan = build_plan(cfg, sync_mode=sync_mode, mixed_pairs=mixed_pairs)
+    _, plan = build_plan(cfg, sync_mode=sync_mode, mixed_pairs=mixed_pairs,
+                         verify_ks=verify_ks)
     return HeteroCtx(mode=mode, plan=plan, interpret=interpret)
 
 

@@ -19,10 +19,15 @@ engine mode) and executes the chosen strategy:
 
 Everything happens at trace time (static shapes), so a jitted program bakes
 in the plan — the paper's 'graphs generated in advance by the solver'.
+
+Speculative-decoding verification dispatches use a context view from
+``for_verify(k, lanes)``: same strategies, but sites resolve through the
+plan's VERIFY decisions (solver.py ``solve_verify``) instead of the generic
+nearest-M grid.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional
 
 import jax
@@ -54,6 +59,17 @@ class HeteroCtx:
     order_exchange: bool = True
     layer_mxu_threshold: int = 128       # hetero-layer: M >= this -> MXU path
     stationary: str = "output"
+    # VERIFY site class (speculative decoding): when set to (k, lanes), every
+    # matmul consults plan.verify_decisions first — the solver's plan for the
+    # M = lanes*(k+1) verification dispatch, not the generic nearest-M grid
+    verify_key: Optional[tuple] = None
+
+    def for_verify(self, k: int, lanes: int = 1) -> "HeteroCtx":
+        """A view of this context for verification dispatches: same plan,
+        same mode, but matmul sites resolve through the VERIFY decisions
+        solved for (k, lanes). Callers bake the returned ctx into the jitted
+        ``paged_verify`` graph (trace-time, like every other decision)."""
+        return replace(self, verify_key=(k, lanes))
 
     # ---------------------------------------------------------- primitives --
     def _mxu(self, x2, w):
@@ -96,7 +112,10 @@ class HeteroCtx:
     def _tensor_level(self, x2, w, name, M, N):
         dec = None
         if self.plan is not None and name is not None:
-            dec = self.plan.decision(name, M)
+            if self.verify_key is not None:
+                dec = self.plan.verify_decision(name, *self.verify_key)
+            if dec is None:
+                dec = self.plan.decision(name, M)
             if dec is None:       # nearest-M fallback (solver probes a grid)
                 ms = sorted({m for (s, m) in self.plan.decisions if s == name})
                 if ms:

@@ -23,6 +23,17 @@ Strategies (paper §4.2):
                cost model behind the scheduler's mixed batching
                (serving/scheduler.py::PagedBatcher(mixed_batch=True)).
 
+Site classes: the plain decisions cover prefill/decode token counts; the
+VERIFY class (``solve_verify``) covers speculative-decoding verification
+dispatches — ``lanes`` lanes each scoring its pending token plus K drafts,
+an M = lanes*(K+1) matmul. Decode proper is stuck at M = lanes on the
+memory-bound flexible path; verification is the one decode-side workload
+whose M is scheduler-chosen, so it gets its own solved decisions
+(``plan.verify_decisions``) and its own gain account (``verify_gain_us``:
+one M = lanes*(K+1) dispatch vs K+1 M = lanes dispatches, each paying
+T_sync — the paper's §4.3 dispatch tax, removed by batching tokens instead
+of fusing windows).
+
 The solver additionally picks the distributed KV layout for decode
 ("kv head-parallel" vs "kv sequence-parallel" split-KV) from the collective
 model — the mesh-level expression of the same partitioning decision.
@@ -72,6 +83,9 @@ class PartitionPlan:
     # (m_prefill + m_decode) can never collide with a plain-M decision:
     # (site, m_prefill, m_decode) -> Decision(strategy='mixed')
     mixed_decisions: dict = field(default_factory=dict)
+    # speculative-decoding VERIFY site class, again its own key space:
+    # (site, k, lanes) -> Decision for the M = lanes*(k+1) verification
+    verify_decisions: dict = field(default_factory=dict)
 
     def decision(self, site: str, M: int) -> Optional[Decision]:
         return self.decisions.get((site, M))
@@ -80,13 +94,19 @@ class PartitionPlan:
                        m_decode: int) -> Optional[Decision]:
         return self.mixed_decisions.get((site, m_prefill, m_decode))
 
+    def verify_decision(self, site: str, k: int,
+                        lanes: int = 1) -> Optional[Decision]:
+        return self.verify_decisions.get((site, k, lanes))
+
     def save(self, path):
         Path(path).write_text(json.dumps({
             "arch": self.arch, "sync_mode": self.sync_mode,
             "kv_mode": self.kv_mode,
             "decisions": [asdict(d) for d in self.decisions.values()],
             "mixed_decisions": [[list(k), asdict(d)] for k, d in
-                                self.mixed_decisions.items()]}))
+                                self.mixed_decisions.items()],
+            "verify_decisions": [[list(k), asdict(d)] for k, d in
+                                 self.verify_decisions.items()]}))
 
     @classmethod
     def load(cls, path) -> "PartitionPlan":
@@ -98,6 +118,8 @@ class PartitionPlan:
             plan.decisions[(dec.site, dec.M)] = dec
         for k, d in data.get("mixed_decisions", []):
             plan.mixed_decisions[tuple(k)] = Decision(**d)
+        for k, d in data.get("verify_decisions", []):
+            plan.verify_decisions[tuple(k)] = Decision(**d)
         return plan
 
 
@@ -205,12 +227,43 @@ class PartitionSolver:
                   + t_sync)
         return serial - self.solve_mixed(site, m_prefill, m_decode).t_us
 
+    # ---- speculative-decoding verification ----------------------------------
+    def solve_verify(self, site: str, k: int, lanes: int = 1) -> Decision:
+        """Plan the VERIFY site class: one speculative-decoding verification
+        dispatch scores ``lanes`` lanes x (pending token + k drafts) — an
+        M = lanes*(k+1) matmul at this weight site. The strategy search is
+        the standard one (verification is just a matmul), but the decision
+        lives in its own key space because M is chosen by the SCHEDULER
+        (via K), not by the request: raising K walks verification out of
+        the xla_only decode regime into act/hybrid territory, which is
+        exactly the lever speculative decoding hands the solver."""
+        dec = self.solve_site(site, lanes * (k + 1))
+        return Decision(site=site, M=dec.M, strategy=dec.strategy,
+                        t_us=dec.t_us, n_split=dec.n_split,
+                        m_bucket=dec.m_bucket,
+                        ratio=f"verify[k={k},lanes={lanes}]{dec.ratio}")
+
+    def verify_gain_us(self, site: str, k: int, lanes: int = 1) -> float:
+        """Predicted latency saved per site by verifying K drafts in ONE
+        M = lanes*(k+1) dispatch vs emitting the same k+1 tokens as k+1
+        sequential M = lanes decode dispatches (each memory-bound on the
+        flexible path, each paying its own T_sync) — the analytic account
+        of why speculative decoding pays on dispatch-taxed SoCs."""
+        K, N = self.table.sites[site]
+        t_sync = sync_cost_us(self.sync_mode, self.spec)
+        serial = (k + 1) * (combine_single(
+            xla_matmul_parts(lanes, K, N, self.spec), self.spec) + t_sync)
+        return serial - (self.solve_verify(site, k, lanes).t_us + t_sync)
+
     # ---- whole-model plan ---------------------------------------------------
     def solve(self, cfg, Ms=(1, 64, 128, 192, 256, 300, 320, 512, 1024,
-                             2048, 4096), mixed_pairs=()) -> PartitionPlan:
+                             2048, 4096), mixed_pairs=(),
+              verify_ks=()) -> PartitionPlan:
         """``mixed_pairs``: (m_prefill, m_decode) serving pairs — the
         scheduler's (prefill chunk bucket, decode width) grid — solved per
-        site into ``plan.mixed_decisions``."""
+        site into ``plan.mixed_decisions``. ``verify_ks``: (k, lanes)
+        speculative-verification shapes, solved per site into
+        ``plan.verify_decisions``."""
         plan = PartitionPlan(arch=cfg.name, sync_mode=self.sync_mode)
         for site in self.table.sites:
             for M in Ms:
@@ -218,6 +271,9 @@ class PartitionSolver:
             for (mp, md) in mixed_pairs:
                 plan.mixed_decisions[(site, mp, md)] = \
                     self.solve_mixed(site, mp, md)
+            for (k, lanes) in verify_ks:
+                plan.verify_decisions[(site, k, lanes)] = \
+                    self.solve_verify(site, k, lanes)
         plan.kv_mode = self.solve_kv_mode(cfg)
         return plan
 

@@ -18,6 +18,13 @@ Paged mode fuses the engine into the serving path
                     dispatch of the running lanes (§4.1-§4.3 at stage level)
   --max-prefill-chunk N
                     cap on prefill tokens fused per step (--mixed-batch)
+  --spec-k K        speculative decoding: K drafts per round, one batched
+                    K+1-position verify dispatch of the target per round
+                    (serving/spec.py; VERIFY-planned matmuls under
+                    --engine-mode)
+  --spec-draft M    draft model config name (e.g. smollm-135m); omit for
+                    self-speculation (the target drafts for itself)
+  --stats           print the scheduler's unified stats() counter dict
 """
 from __future__ import annotations
 
@@ -63,16 +70,32 @@ def main(argv=None):
                     metavar="N", dest="max_prefill_chunk",
                     help="max prefill tokens fused per scheduler step "
                          "(--mixed-batch; default: largest bucket)")
+    ap.add_argument("--spec-k", type=int, default=None, metavar="K",
+                    dest="spec_k",
+                    help="speculative decoding: K drafts per round "
+                         "(paged mode)")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    dest="spec_draft",
+                    help="draft model config name (--spec-k; default: the "
+                         "target drafts for itself)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the scheduler's stats() counter dict")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=300)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if (args.sync == "device" or args.engine_mode or args.eos_id is not None
-            or args.mixed_batch) and not (args.batched and args.paged):
+            or args.mixed_batch or args.spec_k is not None) \
+            and not (args.batched and args.paged):
         ap.error("--sync device / --engine-mode / --eos-id / --mixed-batch "
-                 "apply to the paged batcher: add --batched --paged")
+                 "/ --spec-k apply to the paged batcher: add "
+                 "--batched --paged")
     if args.max_prefill_chunk is not None and not args.mixed_batch:
         ap.error("--max-prefill-chunk applies to --mixed-batch")
+    if args.spec_draft is not None and args.spec_k is None:
+        ap.error("--spec-draft applies to --spec-k")
+    if args.spec_k is not None and args.mixed_batch:
+        ap.error("--spec-k and --mixed-batch are mutually exclusive")
 
     import jax
     from repro.configs import get_config, get_smoke_config
@@ -84,6 +107,11 @@ def main(argv=None):
                                              Request)
         max_len = args.prompt_len + args.new_tokens + 8
         if args.paged:
+            spec = None
+            if args.spec_k is not None:
+                from repro.serving.spec import SpecConfig
+                spec = SpecConfig(k=args.spec_k, draft=args.spec_draft,
+                                  smoke=args.smoke)
             num_blocks = args.max_blocks or (
                 1 + args.requests * -(-max_len // args.block_size))
             # cap per-request tables at the longest possible request, not
@@ -98,7 +126,8 @@ def main(argv=None):
                               engine_mode=args.engine_mode,
                               eos_id=args.eos_id,
                               mixed_batch=args.mixed_batch,
-                              max_prefill_chunk_per_step=args.max_prefill_chunk)
+                              max_prefill_chunk_per_step=args.max_prefill_chunk,
+                              spec=spec)
             label = (f"paged (bs={args.block_size}, "
                      f"blocks={num_blocks}, W={args.decode_width}, "
                      f"sync={args.sync}"
@@ -106,7 +135,10 @@ def main(argv=None):
                         else "")
                      + (f", engine={args.engine_mode}" if args.engine_mode
                         else "")
-                     + (", mixed" if args.mixed_batch else "") + ")")
+                     + (", mixed" if args.mixed_batch else "")
+                     + (f", spec k={args.spec_k} "
+                        f"draft={args.spec_draft or 'self'}"
+                        if spec else "") + ")")
         else:
             cb = ContinuousBatcher(cfg, max_batch=4, max_len=max_len)
             label = "batched"
@@ -131,6 +163,14 @@ def main(argv=None):
             print(f"  prefill: {cb.prefill_dispatches} standalone dispatches,"
                   f" {cb.fused_steps} chunks fused into decode dispatches "
                   f"({cb.total_dispatches} host dispatches total)")
+            if args.spec_k is not None:
+                s = cb.stats()
+                print(f"  spec: {s['verify_dispatches']} verify dispatches, "
+                      f"acceptance {s['acceptance_rate']:.2f} "
+                      f"({s['accepted_tokens']}/{s['drafted_tokens']} drafts,"
+                      f" draft={s['draft_model']})")
+        if args.stats:
+            print(f"  stats: {cb.stats()}")
         return
 
     from repro.core.engine import InferenceEngine

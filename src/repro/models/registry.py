@@ -15,7 +15,12 @@ serving scheduler (serving/scheduler.py::PagedBatcher):
         -> (last_logits, pool)
     paged_decode_step(params, token, pool, block_tables, lengths)
         -> (logits, pool)
-``paged_decode_step`` is also the body of the fused-window decode scan
+    paged_verify(params, tokens, pool, block_table, start_index)
+        -> (per_position_logits, pool)
+``paged_verify`` is the speculative-decoding verification step (one
+dispatch scores a lane's pending token plus its K drafted tokens —
+serving/spec.py); ``paged_decode_step`` is also the body of the fused-window
+decode scan
 (core/sync.py::paged_decode_window): it must stay a pure pool -> pool
 function of statically-shaped operands so a ``lax.scan`` can carry the pool
 across a whole window with zero host round-trips. ``mixed_step`` is the
@@ -54,6 +59,8 @@ class Model:
     init_paged_cache: Optional[Callable] = None
     paged_prefill: Optional[Callable] = None
     paged_decode_step: Optional[Callable] = None
+    # speculative decoding: K+1-position verification in one dispatch
+    paged_verify: Optional[Callable] = None
     # stage-parallel mixed batch: one dispatch = batched paged decode step
     # for all lanes + one prefill chunk, sharing a single pool write
     mixed_step: Optional[Callable] = None
@@ -79,6 +86,7 @@ def build_model(cfg) -> Model:
             init_paged_cache=partial(transformer.init_paged_cache, cfg),
             paged_prefill=partial(transformer.paged_prefill, cfg=cfg),
             paged_decode_step=partial(transformer.paged_decode_step, cfg=cfg),
+            paged_verify=partial(transformer.paged_verify, cfg=cfg),
             mixed_step=partial(transformer.mixed_step, cfg=cfg),
         )
     return Model(

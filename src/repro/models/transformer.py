@@ -187,6 +187,27 @@ def prefill(params, tokens, cache, cfg, *, start_index=0, unroll=False,
                     "index": jnp.asarray(start_index + S, jnp.int32)}
 
 
+def prefill_slot(params, cache, tokens, slot, start, cfg, *, chunk: int):
+    """Prefill one prompt chunk of one request into ``slot`` of a batched
+    dense cache (``[L, B, S, Hkv, D]``): slice the slot out, run
+    :func:`prefill` at ``start``, write the updated KV back. Shared by the
+    dense continuous batcher's admission path and the speculative
+    decoder's draft-lane prefill (serving/spec.py). ``chunk`` is unused in
+    the body — callers jit with ``static_argnames=('chunk',)`` so each
+    bucket length keys its own compiled graph."""
+    sub = {"k": jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1),
+           "v": jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1),
+           "index": start}
+    logits, new = prefill(params, tokens[None, :], sub, cfg,
+                          start_index=start)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], new["k"], slot, axis=1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], new["v"], slot, axis=1)
+    return logits, cache
+
+
 # ------------------------------------------------------------ paged cache --
 
 def init_paged_cache(cfg, *, num_blocks: int, block_size: int,
@@ -238,6 +259,42 @@ def paged_prefill(params, tokens, pool, cfg, *, block_table, start_index=0,
                                 unroll=unroll, hetero_ctx=hetero_ctx)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _head_logits(params, x[:, -1:, :], cfg, hetero_ctx)
+    return logits, pool
+
+
+def paged_verify(params, tokens, pool, cfg, *, block_table, start_index,
+                 unroll=False, hetero_ctx=None):
+    """Speculative-decoding verification step: append ``tokens`` ([B, K+1] —
+    each lane's pending token plus its K drafted tokens) after each lane's
+    cached prefix and return PER-POSITION logits over all K+1 positions.
+
+    Generalizes the two existing paged inference steps: ``paged_prefill``
+    runs many tokens but emits only last-token logits; ``paged_decode_step``
+    emits per-position logits but for one token (this is the K=0 case).
+    Verification needs both: every position's logits feed the greedy
+    accept/reject rule (serving/sampler.py::greedy_verify), and rejected
+    positions are reclaimed afterwards by ``PagedKVCache.truncate_to``
+    (stale pool slots past the accepted prefix are masked positionally and
+    rewritten before any later query attends them, so rollback is free on
+    the device side).
+
+    ``start_index``: [B] per-lane write positions (like ``paged_decode_step``
+    lengths), or a scalar for uniform batches. The K-token matmuls are an
+    M=K+1-shaped site class of their own — a ``hetero_ctx`` built with
+    ``verify_ks`` routes them through the solver's VERIFY decisions.
+    Returns (logits [B, K+1, V], updated pool).
+    """
+    S = tokens.shape[1]
+    start_index = jnp.asarray(start_index, jnp.int32)
+    steps = jnp.arange(S, dtype=jnp.int32)
+    positions = (start_index[:, None] + steps[None, :]
+                 if start_index.ndim == 1 else start_index + steps)
+    x = _embed(params, tokens, cfg)
+    x, pool = _run_layers_paged(params, x, cfg, positions=positions,
+                                pool=pool, block_table=block_table,
+                                unroll=unroll, hetero_ctx=hetero_ctx)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head_logits(params, x, cfg, hetero_ctx)
     return logits, pool
 
 

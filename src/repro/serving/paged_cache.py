@@ -25,6 +25,12 @@ Allocator invariants (asserted):
   * block 0 is never handed out and never freed;
   * a block is owned by at most one request at a time;
   * ``free + outstanding == num_blocks - 1`` at all times.
+
+Growth is two-phase (``open_sequence`` reserves, ``grow_to`` draws on the
+reservation) and reversible: ``truncate_to`` rolls a sequence back to an
+accepted token prefix, returning whole blocks past it to the free list while
+keeping them inside the reservation — the speculative-decoding rollback
+primitive (serving/spec.py).
 """
 from __future__ import annotations
 
@@ -160,6 +166,28 @@ class PagedKVCache:
         next block if the write crosses a block boundary. Returns True if a
         block was allocated (block-granularity backfill signal)."""
         return self.grow_to(seq, seq.length + 1) > 0
+
+    def truncate_to(self, seq: SequenceBlocks, n_tokens: int) -> int:
+        """Token-level rollback (speculative decoding): keep only the blocks
+        covering the first ``n_tokens`` accepted tokens and return every
+        whole block past them to the free list, where in-flight growth of
+        OTHER admitted sequences can reclaim them (new admissions still see
+        them as promised). The freed blocks re-enter this sequence's
+        admission-time reservation (``reserved`` is unchanged,
+        ``_reserved_unheld`` grows by the freed count), so a later
+        ``grow_to`` can always re-cover the rolled-back positions — rollback
+        never strands a request mid-flight. Frees are block-granular:
+        a partially-filled tail block is kept. Returns the number of blocks
+        freed."""
+        keep = 0 if n_tokens <= 0 else self.blocks_for(n_tokens)
+        freed = seq.blocks[keep:]
+        if freed:
+            self.allocator.free(freed)
+            del seq.blocks[keep:]
+            seq.table[keep: keep + len(freed)] = 0
+            self._reserved_unheld += len(freed)
+        seq.length = min(seq.length, n_tokens)
+        return len(freed)
 
     def close_sequence(self, seq: SequenceBlocks) -> None:
         self.allocator.free(seq.blocks)

@@ -1,4 +1,5 @@
-"""Token sampling: greedy / temperature / top-k / top-p (fully jittable)."""
+"""Token sampling — greedy / temperature / top-k / top-p — plus the
+speculative-decoding acceptance rule (``greedy_verify``). Fully jittable."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -38,3 +39,34 @@ def sample(logits: jax.Array, rng, cfg: SamplerConfig) -> jax.Array:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(rng, filter_logits(logits, cfg),
                                   axis=-1).astype(jnp.int32)
+
+
+def greedy_verify(draft_tokens: jax.Array, target_logits: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Greedy speculative-decoding acceptance rule (lossless: the emitted
+    stream is exactly what per-token greedy decoding of the target would
+    produce, whatever the drafts were).
+
+    draft_tokens: [B, K] int32 — each lane's K drafted tokens.
+    target_logits: [B, K+1, V] — the target model's per-position logits from
+    one ``paged_verify`` dispatch; position ``j`` scores the token FOLLOWING
+    the j-th appended token (the lane's pending token, then the drafts).
+
+    A draft is accepted while it matches the target's greedy choice at its
+    position; the first mismatch position contributes the target's own
+    (correction) token, and full acceptance contributes the free bonus
+    token after the last draft — so every round emits between 1 and K+1
+    tokens. Returns ``(emitted [B, K+1] int32, n_emitted [B] int32)``:
+    ``emitted[b, :n_emitted[b]]`` is the lane's verified token stream for
+    the round (slots past it hold the target's greedy tokens, which callers
+    must ignore). Fully jittable; lives here so the scheduler, the
+    single-stream SpecDecoder and the tests all share one verification
+    implementation.
+    """
+    greedy = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)  # [B, K+1]
+    match = draft_tokens == greedy[:, :-1]                         # [B, K]
+    accepted = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+    slots = jnp.arange(greedy.shape[1], dtype=jnp.int32)[None, :]
+    drafts_pad = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    emitted = jnp.where(slots < accepted[:, None], drafts_pad, greedy)
+    return emitted, accepted + 1

@@ -37,6 +37,19 @@ serving path (docs/heterogeneous-execution.md):
     (compute-bound, aligned MXU path) run concurrently — the SoC's full
     compute AND bandwidth envelopes — so admission stops costing its own
     dispatches and never stalls decode.
+  * ``spec=SpecConfig(...)`` — heterogeneous speculative decoding
+    (serving/spec.py): each scheduler step becomes one ROUND — the draft
+    model proposes K tokens per lane on the flexible path (per-lane draft
+    caches, one fused draft dispatch under ``sync='device'``), ONE
+    ``paged_verify`` target dispatch scores all lanes' K+1 positions
+    through the solver's VERIFY-planned matmuls, greedy acceptance emits
+    1..K+1 tokens per lane, and ``PagedKVCache.truncate_to`` reclaims the
+    rejected tail block-granularly. Decode's per-token dispatch tax drops
+    to per-round; greedy outputs stay bit-identical to the non-spec arms.
+
+Both batchers expose one ``stats() -> dict`` counter snapshot (dispatches,
+steps, fusion and speculation counters) — the contract the benches assert
+on and ``serve.py --stats`` prints.
 """
 from __future__ import annotations
 
@@ -51,7 +64,8 @@ import numpy as np
 from repro.models import build_model
 
 from .paged_cache import PagedKVCache, SequenceBlocks
-from .sampler import SamplerConfig, sample
+from .sampler import SamplerConfig, greedy_verify, sample
+from .spec import DraftLanes, SpecConfig
 
 
 def bucket_chunks(S: int, buckets: tuple) -> list[int]:
@@ -98,29 +112,18 @@ class ContinuousBatcher:
         self.budget: list[int] = [0] * max_batch
         self.lengths: list[int] = [0] * max_batch   # python-side slot lengths
         self.peak_active = 0           # max concurrent requests observed
+        self.decode_dispatches = 0     # batched decode steps issued
+        self.decode_steps = 0          # per-slot tokens decoded
+        self.prefill_dispatches = 0    # prefill chunk dispatches issued
 
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
-        self._prefill_piece = jax.jit(self._prefill_piece_impl,
+        from repro.models import transformer
+        self._prefill_piece = jax.jit(partial(transformer.prefill_slot,
+                                              cfg=cfg),
                                       static_argnames=("chunk",),
                                       donate_argnums=(1,))
 
     # ------------------------------------------------------------ plumbing --
-    def _prefill_piece_impl(self, params, cache, tokens, slot, start, *,
-                            chunk: int):
-        """Prefill one chunk of one request into its slot of the big cache."""
-        sub = {"k": jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1),
-               "v": jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1),
-               "index": start}
-        from repro.models import transformer
-        logits, new = transformer.prefill(params, tokens[None, :], sub,
-                                          self.cfg, start_index=start)
-        cache = dict(cache)
-        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], new["k"], slot, axis=1)
-        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], new["v"], slot, axis=1)
-        return logits, cache
-
     def submit(self, req: Request):
         self.queue.append(req)
 
@@ -136,6 +139,7 @@ class ContinuousBatcher:
                     logits, self.cache = self._prefill_piece(
                         self.params, self.cache, piece,
                         jnp.asarray(b), jnp.asarray(idx, jnp.int32), chunk=c)
+                    self.prefill_dispatches += 1
                     idx += c
                 self.cache["index"] = self.cache["index"].at[b].set(S)
                 self.lengths[b] = S
@@ -162,6 +166,7 @@ class ContinuousBatcher:
         # decode_step itself advances every slot's index by one
         logits, self.cache = self._decode(self.params,
                                           jnp.asarray(last), self.cache)
+        self.decode_dispatches += 1
         self.rng, k = jax.random.split(self.rng)
         toks = np.asarray(sample(logits[:, -1, :], k, self.sampler))
         for b in active:
@@ -169,11 +174,25 @@ class ContinuousBatcher:
             req.output.append(int(toks[b]))
             self.budget[b] -= 1
             self.lengths[b] += 1
+            self.decode_steps += 1
             if self.budget[b] <= 0 or self.lengths[b] + 1 >= self.S:
                 req.done = True
                 self.slots[b] = None           # free slot; queue backfills
                 self.lengths[b] = 0
         return True
+
+    def stats(self) -> dict:
+        """Unified counter snapshot (same contract as ``PagedBatcher.stats``):
+        dispatches actually issued vs tokens produced."""
+        return {
+            "peak_active": self.peak_active,
+            "decode_dispatches": self.decode_dispatches,
+            "decode_steps": self.decode_steps,
+            "prefill_dispatches": self.prefill_dispatches,
+            "fused_steps": 0,
+            "total_dispatches": (self.decode_dispatches +
+                                 self.prefill_dispatches),
+        }
 
     def run(self, requests: list[Request], max_ticks: int = 10_000):
         for r in requests:
@@ -243,6 +262,17 @@ class PagedBatcher:
     dispatches when no lane is decoding. Fusion reorders dispatches, never
     math: the two streams touch disjoint pool blocks, so greedy outputs
     stay token-identical to the admit-then-decode arms.
+
+    ``spec=SpecConfig(k=K, draft=...)`` (or just ``spec=K``) turns on
+    speculative decoding (serving/spec.py, greedy sampler only): each step
+    is one round — K drafts per lane from the draft model's per-lane
+    caches, ONE batched ``paged_verify`` target dispatch over every lane's
+    pending+draft tokens (the solver's VERIFY site class), greedy
+    acceptance, token-level pool rollback via ``truncate_to``. The draft
+    loop is host-stepped under ``sync='host'`` and one fused on-device
+    scan under ``sync='device'``; the TARGET pays one dispatch per round
+    either way, which is the counter the benches compare. Mutually
+    exclusive with ``mixed_batch`` (both re-purpose the step loop).
     """
 
     def __init__(self, cfg, params=None, *, num_blocks: int = 65,
@@ -253,11 +283,20 @@ class PagedBatcher:
                  engine_mode: str | None = None, eos_id: int | None = None,
                  mixed_batch: bool = False,
                  max_prefill_chunk_per_step: int | None = None,
-                 interpret: bool = True):
+                 spec: SpecConfig | int | None = None,
+                 spec_draft_params=None, interpret: bool = True):
         if sync not in ("host", "device"):
             raise ValueError(f"sync must be 'host' or 'device', got {sync!r}")
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
+        if isinstance(spec, int):
+            spec = SpecConfig(k=spec)
+        if spec is not None and mixed_batch:
+            raise ValueError("spec mode and mixed_batch are mutually "
+                             "exclusive")
+        if spec is not None and sampler.temperature > 0.0:
+            raise ValueError("spec mode implements greedy verification only;"
+                             " use a temperature-0 sampler")
         if max_prefill_chunk_per_step is not None \
                 and max_prefill_chunk_per_step < 1:
             raise ValueError("max_prefill_chunk_per_step must be >= 1, got "
@@ -296,6 +335,7 @@ class PagedBatcher:
                               (tuple(b for b in self.buckets if b <= cap)
                                or (cap,)))
         self._admitting: Optional[_Admission] = None
+        self.spec = spec
         if engine_mode is not None:
             from repro.core.engine import build_hetero_ctx
             self.ctx = build_hetero_ctx(
@@ -308,6 +348,10 @@ class PagedBatcher:
                 mixed_pairs=(tuple((b, decode_width)
                                    for b in self.admit_buckets)
                              if mixed_batch else ()),
+                # VERIFY site class: the M = W*(K+1) verification dispatches
+                # this scheduler issues in spec mode
+                verify_ks=(((spec.k, decode_width),)
+                           if spec is not None else ()),
                 interpret=interpret)
         else:
             self.ctx = None
@@ -319,6 +363,38 @@ class PagedBatcher:
         self.decode_steps = 0
         self.prefill_dispatches = 0      # standalone prefill-chunk dispatches
         self.fused_steps = 0             # prefill chunks fused into decode
+        # speculative decoding counters (spec mode): the win is
+        # verify_dispatches << decode_steps; acceptance_rate explains it
+        self.spec_rounds = 0             # per-lane speculation rounds
+        self.drafted_tokens = 0          # K drafts offered per lane-round
+        self.accepted_tokens = 0         # drafts the target verified correct
+        self.verify_dispatches = 0       # batched paged_verify dispatches
+
+        if spec is not None:
+            if self.model.paged_verify is None:
+                raise ValueError(f"{cfg.name}: speculative decoding requires"
+                                 " an attention-family target model")
+            draft_cfg = spec.resolve_draft(cfg)
+            self.draft_cfg = draft_cfg
+            if spec_draft_params is None:
+                spec_draft_params = (
+                    self.params if draft_cfg is cfg else
+                    build_model(draft_cfg).init(jax.random.PRNGKey(seed + 1)))
+            # the longest admissible request bounds the draft cache; +k+1
+            # slots absorb the round's overshooting draft writes
+            self.drafts = DraftLanes(
+                draft_cfg, spec_draft_params, lanes=decode_width,
+                max_len=self.kv.max_blocks_per_seq * block_size + spec.k + 1,
+                buckets=self.buckets, sync=sync,
+                dtype=self.kv.pool["k"].dtype)
+            vctx = (self.ctx.for_verify(spec.k, decode_width)
+                    if self.ctx is not None else None)
+            self._verify = jax.jit(partial(self.model.paged_verify,
+                                           hetero_ctx=vctx),
+                                   donate_argnums=(2,))
+            self._accept = jax.jit(greedy_verify)
+        else:
+            self.drafts = None
 
         # the solver plan is baked in at trace time ('graphs generated in
         # advance'): jit compiles one graph per chunk length, so standard
@@ -338,8 +414,40 @@ class PagedBatcher:
     @property
     def total_dispatches(self) -> int:
         """Host dispatches issued end-to-end (prefill + decode; a fused
-        mixed step counts once — that's the point)."""
+        mixed step counts once — that's the point). In spec mode this is
+        TARGET-model dispatches; the draft model's are tracked separately
+        (``stats()['draft_dispatches']``)."""
         return self.decode_dispatches + self.prefill_dispatches
+
+    def stats(self) -> dict:
+        """Unified counter snapshot: every ad-hoc dispatch/fusion/
+        speculation counter behind one dict — what ``serve.py --stats``
+        prints and the benches assert on. Spec-mode keys appear only when
+        speculation is on (``target_dispatches`` == ``total_dispatches``:
+        draft-model work is deliberately kept out of the headline
+        number)."""
+        s = {
+            "peak_active": self.peak_active,
+            "decode_dispatches": self.decode_dispatches,
+            "decode_steps": self.decode_steps,
+            "prefill_dispatches": self.prefill_dispatches,
+            "fused_steps": self.fused_steps,
+            "total_dispatches": self.total_dispatches,
+        }
+        if self.spec is not None:
+            s.update({
+                "spec_k": self.spec.k,
+                "draft_model": self.draft_cfg.name,
+                "spec_rounds": self.spec_rounds,
+                "drafted_tokens": self.drafted_tokens,
+                "accepted_tokens": self.accepted_tokens,
+                "acceptance_rate": (self.accepted_tokens /
+                                    max(self.drafted_tokens, 1)),
+                "verify_dispatches": self.verify_dispatches,
+                "draft_dispatches": self.drafts.dispatches,
+                "target_dispatches": self.total_dispatches,
+            })
+        return s
 
     @property
     def busy(self) -> bool:
@@ -371,8 +479,9 @@ class PagedBatcher:
             return None
         return self.kv.open_sequence(prompt_tokens=S, total_tokens=total)
 
-    def _place(self, req: Request, seq: SequenceBlocks, first: int):
-        """Prefill done: record the prefill-sampled token and occupy a lane."""
+    def _place(self, req: Request, seq: SequenceBlocks, first: int) -> int:
+        """Prefill done: record the prefill-sampled token and occupy a lane
+        (returned so spec mode can target the lane's draft cache)."""
         seq.length = len(req.prompt)
         req.output.append(first)
         budget = req.max_new_tokens - 1
@@ -380,6 +489,7 @@ class PagedBatcher:
             budget = 0                  # satisfied at prefill, like max=1
         lane = next(i for i in range(self.W) if self.lanes[i] is None)
         self.lanes[lane] = _PagedLane(req=req, seq=seq, budget=budget)
+        return lane
 
     def _admit(self):
         """Admit-then-decode (the baseline arm): whole prompts prefill as
@@ -401,8 +511,13 @@ class PagedBatcher:
                 self.prefill_dispatches += 1
                 idx += c
             self.rng, k = jax.random.split(self.rng)
-            self._place(req, seq, int(sample(logits[:, -1, :], k,
-                                             self.sampler)[0]))
+            lane = self._place(req, seq, int(sample(logits[:, -1, :], k,
+                                                    self.sampler)[0]))
+            if self.spec is not None and self.lanes[lane] is not None \
+                    and self.lanes[lane].budget > 0:
+                # the draft model consumes the prompt too (its lane cache
+                # must mirror the target's token stream before drafting)
+                self.drafts.prefill(lane, req.prompt)
 
     def _start_admission(self):
         """Mixed batching: take ONE admission ticket at a time. A free lane
@@ -468,6 +583,12 @@ class PagedBatcher:
                 self._finish(i)
                 active.remove(i)
 
+        if self.spec is not None:
+            if not active:
+                return False
+            self._spec_round(active)
+            return True
+
         adm_chunk = pre_logits = None
         if self._admitting is not None:
             adm_chunk = self._admission_chunk()
@@ -494,6 +615,64 @@ class PagedBatcher:
         else:
             self._decode_tick(active)
         return True
+
+    def _spec_round(self, active):
+        """One speculative round across all active lanes: K drafts per lane
+        from the per-lane draft caches (K+1 flexible-path steps — one fused
+        on-device scan under ``sync='device'``), ONE batched ``paged_verify``
+        target dispatch over every lane's pending+draft tokens (M = W*(K+1),
+        the solver's VERIFY site class), greedy acceptance on the host, then
+        token-level rollback: ``truncate_to`` returns whole pool blocks past
+        each lane's accepted prefix and the draft caches reset their
+        cursors. Emits 1..K+1 verified tokens per lane per target dispatch;
+        the stream is bit-identical to the non-spec greedy arms."""
+        k = self.spec.k
+        tables = np.zeros((self.W, self.kv.max_blocks_per_seq), np.int32)
+        starts = np.zeros((self.W,), np.int32)
+        last = np.zeros((self.W, 1), np.int32)
+        for i in active:
+            st = self.lanes[i]
+            # coverage capped by the remaining budget: only rows the
+            # acceptance rule can emit are ever read, so growth stays
+            # inside the admission reservation; writes past the covered
+            # blocks sink into the null block like any masked lane
+            self.kv.grow_to(st.seq, st.seq.length + min(k + 1, st.budget))
+            tables[i] = st.seq.table
+            starts[i] = st.seq.length
+            last[i, 0] = st.req.output[-1]
+        drafts = self.drafts.draft(last, k)                    # [W, k]
+        tokens = np.concatenate([last, drafts], axis=1)        # [W, k+1]
+        logits, self.kv.pool = self._verify(
+            self.params, jnp.asarray(tokens), self.kv.pool,
+            block_table=jnp.asarray(tables),
+            start_index=jnp.asarray(starts))
+        self.verify_dispatches += 1
+        self.decode_dispatches += 1      # the round's one TARGET dispatch
+        emitted, n_emit = self._accept(jnp.asarray(drafts), logits)
+        emitted, n_emit = np.asarray(emitted), np.asarray(n_emit)
+        for i in active:
+            st = self.lanes[i]
+            e = min(int(n_emit[i]), st.budget)
+            toks = [int(t) for t in emitted[i, :e]]
+            hit_eos = self.eos_id is not None and self.eos_id in toks
+            if hit_eos:
+                toks = toks[: toks.index(self.eos_id) + 1]
+            self.spec_rounds += 1
+            # acceptance rate counts only drafts whose verification row was
+            # budget-covered (rows past the coverage score null-block
+            # garbage) and only acceptances that actually emitted — neither
+            # side of the ratio may include schedule-truncated drafts
+            self.drafted_tokens += min(k, st.budget)
+            self.accepted_tokens += min(int(n_emit[i]) - 1, len(toks))
+            st.req.output.extend(toks)
+            st.budget -= len(toks)
+            self.decode_steps += len(toks)
+            new_len = st.seq.length + len(toks)
+            self.kv.truncate_to(st.seq, new_len)    # paged rollback
+            st.seq.length = new_len
+            self.drafts.rollback(i, new_len)        # draft-cache rollback
+            if st.budget <= 0 or hit_eos:
+                self._finish(i)
 
     def _decode_tick(self, active, adm_chunk=None):
         """Host-synced baseline arm: ONE decode step, one dispatch + host

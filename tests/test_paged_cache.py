@@ -109,6 +109,84 @@ def test_cache_rejects_oversized_request(smoke_model):
         kv.open_sequence(prompt_tokens=64, total_tokens=64)
 
 
+# ----------------------------------------------- truncate_to (spec rollback) --
+
+def test_truncate_to_frees_block_granular(smoke_model):
+    """Rollback keeps exactly the blocks covering the accepted prefix: whole
+    blocks past it return to the free list, a partially-filled tail block
+    stays, freed table slots re-point at the null block."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=9, block_size=16, dtype=jnp.float32)
+    seq = kv.open_sequence(prompt_tokens=20, total_tokens=112)  # 2 now, 7 rsv
+    seq.length = 20
+    kv.grow_to(seq, 80)
+    assert len(seq.blocks) == 5
+    seq.length = 80
+    assert kv.truncate_to(seq, 40) == 2          # keep ceil(40/16) = 3
+    assert len(seq.blocks) == 3 and seq.length == 40
+    assert (seq.table[3:] == 0).all()            # freed slots -> null block
+    assert kv.truncate_to(seq, 33) == 0          # tail block only partially
+    assert len(seq.blocks) == 3                  # filled: kept, not freed
+    # reservation preserved: re-growth to the full admitted budget succeeds
+    kv.grow_to(seq, 112)
+    assert len(seq.blocks) == 7
+    kv.close_sequence(seq)
+    kv.assert_drained()
+
+
+def test_truncate_to_reservation_accounting(smoke_model):
+    """Freed blocks stay inside the admission reservation: the free list
+    grows (in-flight growth of OTHER admitted requests can consume them)
+    but new admissions still see them as promised."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=9, block_size=16, dtype=jnp.float32)
+    seq = kv.open_sequence(prompt_tokens=48, total_tokens=128)  # 3 now, 8 rsv
+    seq.length = 48
+    assert kv.n_free_unreserved == 0 and not kv.can_admit(16)
+    kv.grow_to(seq, 128)
+    assert kv.allocator.n_free == 0
+    assert kv.truncate_to(seq, 48) == 5
+    assert kv.allocator.n_free == 5              # physically free again...
+    assert kv.n_free_unreserved == 0             # ...but still promised
+    assert not kv.can_admit(16)
+    kv.close_sequence(seq)
+    kv.assert_drained()
+    assert kv.can_admit(8 * 16)
+
+
+def test_truncate_rollback_storm_invariants(smoke_model):
+    """Seeded grow/rollback storm over interleaved sequences: allocator
+    invariants hold after every operation and the pool fully drains."""
+    cfg, _, _ = smoke_model
+    rng = np.random.default_rng(4)
+    kv = PagedKVCache(cfg, num_blocks=17, block_size=8, dtype=jnp.float32)
+    seqs = []
+    for _ in range(3):
+        total = int(rng.integers(16, 40))
+        seqs.append((kv.open_sequence(prompt_tokens=8, total_tokens=total),
+                     total))
+    committed = [8, 8, 8]
+    for _ in range(60):
+        i = int(rng.integers(len(seqs)))
+        seq, total = seqs[i]
+        if rng.random() < 0.5:                   # speculate: overgrow
+            target = int(rng.integers(committed[i], total + 1))
+            kv.grow_to(seq, target)
+        else:                                    # verify: accept a prefix,
+            accepted = int(rng.integers(committed[i],
+                                        len(seq.blocks) * 8 + 1))
+            accepted = min(accepted, total)
+            kv.truncate_to(seq, accepted)        # roll back the rest
+            committed[i] = max(committed[i], min(accepted,
+                                                 len(seq.blocks) * 8))
+        kv.allocator.check()
+        assert kv._reserved_unheld >= 0
+        assert len(seq.blocks) <= seq.reserved
+    for seq, _ in seqs:
+        kv.close_sequence(seq)
+    kv.assert_drained()
+
+
 # ----------------------------------------------------- numerics exactness --
 
 def test_paged_single_request_matches_dense(smoke_model):

@@ -1,11 +1,13 @@
 """Sampler unit tests: greedy/temperature equivalence, top-k masking,
-top-p (nucleus) cutoff properties. All seeded, no sampling statistics."""
+top-p (nucleus) cutoff properties, and the speculative-decoding greedy
+acceptance rule. All seeded, no sampling statistics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serving.sampler import SamplerConfig, filter_logits, sample
+from repro.serving.sampler import (SamplerConfig, filter_logits,
+                                   greedy_verify, sample)
 
 RNG = jax.random.PRNGKey(3)
 
@@ -99,3 +101,81 @@ def test_topp_one_keeps_everything():
     logits = _logits(37)
     out = filter_logits(logits, SamplerConfig(temperature=1.0, top_p=1.0))
     assert jnp.isfinite(out).all()
+
+
+# ----------------------------------------------- speculative verification --
+
+def _target_logits(greedy_tokens, v=32):
+    """Logits whose per-position argmax is exactly ``greedy_tokens``."""
+    g = np.asarray(greedy_tokens)
+    logits = np.full(g.shape + (v,), -1.0, np.float32)
+    np.put_along_axis(logits, g[..., None], 5.0, axis=-1)
+    return jnp.asarray(logits)
+
+
+def test_greedy_verify_full_acceptance():
+    """Drafts that equal the target's greedy choices all survive, and the
+    bonus token (position K) rides along: K+1 emitted."""
+    greedy = jnp.asarray([[3, 7, 1, 9]])            # K=3 drafts + bonus
+    emitted, n = greedy_verify(greedy[:, :-1], _target_logits(greedy))
+    assert int(n[0]) == 4
+    assert list(np.asarray(emitted)[0]) == [3, 7, 1, 9]
+
+
+def test_greedy_verify_zero_acceptance_emits_correction():
+    """A hopeless draft still emits exactly the target's own first greedy
+    token — speculation can never stall a lane."""
+    greedy = jnp.asarray([[3, 7, 1, 9]])
+    drafts = jnp.asarray([[4, 7, 1]])               # wrong at position 0
+    emitted, n = greedy_verify(drafts, _target_logits(greedy))
+    assert int(n[0]) == 1
+    assert int(np.asarray(emitted)[0, 0]) == 3
+
+
+def test_greedy_verify_partial_prefix():
+    """Acceptance stops at the FIRST mismatch even if later drafts agree;
+    the emitted stream is drafts[:a] + the target's correction at a."""
+    greedy = jnp.asarray([[3, 7, 1, 9]])
+    drafts = jnp.asarray([[3, 6, 1]])               # mismatch at position 1
+    emitted, n = greedy_verify(drafts, _target_logits(greedy))
+    assert int(n[0]) == 2
+    assert list(np.asarray(emitted)[0, :2]) == [3, 7]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_greedy_verify_matches_sequential_reference(seed):
+    """Seeded randomized batch: the vectorized rule equals the obvious
+    sequential accept-until-mismatch loop, row by row."""
+    rng = np.random.default_rng(seed)
+    B, K, V = 5, 4, 16
+    drafts = rng.integers(0, V, (B, K)).astype(np.int32)
+    logits = rng.normal(size=(B, K + 1, V)).astype(np.float32)
+    emitted, n = greedy_verify(jnp.asarray(drafts), jnp.asarray(logits))
+    emitted, n = np.asarray(emitted), np.asarray(n)
+    greedy = logits.argmax(-1)
+    for b in range(B):
+        ref = []
+        for j in range(K):
+            if drafts[b, j] == greedy[b, j]:
+                ref.append(drafts[b, j])
+            else:
+                break
+        ref.append(greedy[b, len(ref)])             # correction / bonus
+        assert int(n[b]) == len(ref)
+        assert list(emitted[b, :len(ref)]) == ref
+
+
+def test_greedy_verify_is_lossless_vs_greedy_decode():
+    """The acceptance rule's emitted prefix is identical to running greedy
+    argmax over the same target logits token by token — the invariant that
+    makes speculative decoding an execution-schedule change, not a
+    sampling change."""
+    rng = np.random.default_rng(9)
+    logits = rng.normal(size=(3, 5, 8)).astype(np.float32)
+    drafts = jnp.asarray(rng.integers(0, 8, (3, 4)), jnp.int32)
+    emitted, n = greedy_verify(drafts, jnp.asarray(logits))
+    greedy = logits.argmax(-1)
+    for b in range(3):
+        e = int(np.asarray(n)[b])
+        # every emitted token is the target's greedy choice at its position
+        assert list(np.asarray(emitted)[b, :e]) == list(greedy[b, :e])

@@ -1,11 +1,14 @@
 """Scheduler fuzz: seeded randomized workloads through every serving arm.
 
-For random arrival orders, prompt lengths and token budgets, the four
+For random arrival orders, prompt lengths and token budgets, the six
 scheduler arms — dense slots, paged host-sync, paged device-sync (fused
-windows) and paged mixed-batch (prefill⊕decode fusion) — must all produce
-GREEDY token streams identical to the sequential single-request reference,
-and the paged arms must return every pool block on drain (zero leaks,
-``PagedKVCache.assert_drained``).
+windows), paged mixed-batch (prefill⊕decode fusion), and the two
+speculative-decoding arms (host-sync with an INDEPENDENT random-init draft
+model exercising zero/partial acceptance + rollback storms; device-sync
+self-draft exercising full acceptance and the fused draft scan) — must all
+produce GREEDY token streams identical to the sequential single-request
+reference, and the paged arms must return every pool block on drain (zero
+leaks, ``PagedKVCache.assert_drained``).
 
 Prompt lengths are drawn from a fixed palette so the arms share a bounded
 set of compiled chunk graphs (the bucketing contract); arrival order and
@@ -15,7 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs import get_smoke_config
 from repro.serving.scheduler import ContinuousBatcher, PagedBatcher, Request
+from repro.serving.spec import SpecConfig
 
 LEN_PALETTE = (4, 9, 20, 32, 33, 48, 57, 64)
 BS = 16
@@ -59,6 +64,16 @@ def _arms(cfg, params, n, max_len):
                                              window=3, **paged),
         "mixed": lambda: PagedBatcher(cfg, params, sync="device",
                                       window=3, mixed_batch=True, **paged),
+        # spec arms: token identity is draft-agnostic — the independent
+        # random-init draft mostly REJECTS (rollback storm), the self-draft
+        # mostly accepts (K+1 tokens per verify dispatch)
+        "spec_indep": lambda: PagedBatcher(
+            cfg, params, sync="host",
+            spec=SpecConfig(k=3, draft=get_smoke_config("smollm-135m").with_(
+                param_dtype="float32", compute_dtype="float32")), **paged),
+        "spec_self_device": lambda: PagedBatcher(cfg, params, sync="device",
+                                                 spec=SpecConfig(k=2),
+                                                 **paged),
     }
 
 
@@ -83,4 +98,9 @@ def test_all_arms_token_identical_and_leak_free(smoke_model, seed):
         if isinstance(batcher, PagedBatcher):
             batcher.kv.assert_drained()          # zero leaked blocks
             assert not batcher.busy
+            if batcher.spec is not None:
+                st = batcher.stats()
+                assert st["verify_dispatches"] == st["decode_dispatches"] > 0
+                assert 0.0 <= st["acceptance_rate"] <= 1.0
+                assert st["decode_steps"] >= st["spec_rounds"]
         assert not batcher.queue

@@ -1,0 +1,319 @@
+"""Speculative-decoding subsystem tests (serving/spec.py + the VERIFY
+solver site class + paged_verify + batcher spec mode).
+
+The load-bearing invariant everywhere: greedy verification is LOSSLESS —
+whatever the draft model proposes, the emitted stream must equal per-token
+greedy decoding of the target. Drafting only changes how many target
+dispatches the stream costs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.engine import build_hetero_ctx, build_plan
+from repro.core.profiler import profile_analytic
+from repro.core.solver import PartitionPlan, PartitionSolver
+from repro.models import build_model
+from repro.serving.scheduler import PagedBatcher, Request
+from repro.serving.sampler import SamplerConfig
+from repro.serving.spec import SpecConfig, SpecDecoder
+
+# smoke_model: session-scoped fixture from conftest.py
+
+
+def _indep_draft_cfg():
+    return get_smoke_config("smollm-135m").with_(param_dtype="float32",
+                                                 compute_dtype="float32")
+
+
+def _ref_generate(model, params, prompt, n, eos_id=None):
+    cache = model.init_cache(batch=1, max_len=256, dtype=jnp.float32)
+    logits, cache = model.prefill(params, jnp.asarray(prompt)[None], cache)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    while len(out) < n and not (eos_id is not None and out[-1] == eos_id):
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+# ------------------------------------------------------------ paged_verify --
+
+@pytest.mark.tier1
+def test_paged_verify_matches_sequential_decode_logits(smoke_model):
+    """One K+1-position verify dispatch must reproduce the per-position
+    logits (argmax-identical, numerically close) of feeding the same
+    tokens through paged_decode_step one at a time — the property that
+    makes acceptance decisions equal to sequential greedy decode."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(2)
+    S, K, BS = 21, 3, 16
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, S), jnp.int32)
+    tokens = rng.integers(0, cfg.vocab_size, K + 1).astype(np.int32)
+
+    def fresh(n_blocks=9):
+        pool = model.init_paged_cache(num_blocks=n_blocks, block_size=BS,
+                                      dtype=jnp.float32)
+        table = np.zeros((8,), np.int32)
+        table[:4] = np.arange(1, 5)          # covers S + K + 1 positions
+        _, pool = model.paged_prefill(params, prompt[None], pool,
+                                      block_table=jnp.asarray(table)[None])
+        return pool, jnp.asarray(table)[None]
+
+    pool, bt = fresh()
+    ver_logits, _ = model.paged_verify(
+        params, jnp.asarray(tokens)[None], pool, block_table=bt,
+        start_index=jnp.asarray([S], jnp.int32))
+
+    pool, bt = fresh()
+    seq_logits = []
+    for j, t in enumerate(tokens):
+        lg, pool = model.paged_decode_step(
+            params, jnp.asarray([[t]], jnp.int32), pool, block_tables=bt,
+            lengths=jnp.asarray([S + j], jnp.int32))
+        seq_logits.append(np.asarray(lg[0, 0]))
+    seq_logits = np.stack(seq_logits)
+
+    ver = np.asarray(ver_logits[0])
+    assert (ver.argmax(-1) == seq_logits.argmax(-1)).all()
+    np.testing.assert_allclose(ver, seq_logits, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.tier1
+def test_paged_verify_scalar_start_index(smoke_model):
+    """Scalar start_index (uniform batch) broadcasts like paged_prefill's."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, 10), jnp.int32)
+    pool = model.init_paged_cache(num_blocks=5, block_size=16,
+                                  dtype=jnp.float32)
+    table = np.zeros((4,), np.int32)
+    table[:1] = [1]
+    _, pool = model.paged_prefill(params, prompt[None], pool,
+                                  block_table=jnp.asarray(table)[None])
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 3)), jnp.int32)
+    a, _ = model.paged_verify(params, toks, dict(pool),
+                              block_table=jnp.asarray(table)[None],
+                              start_index=jnp.asarray(10, jnp.int32))
+    b, _ = model.paged_verify(params, toks, dict(pool),
+                              block_table=jnp.asarray(table)[None],
+                              start_index=jnp.asarray([10], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- SpecDecoder --
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("sync,self_draft",
+                         [("host", True), ("host", False),
+                          ("device", True), ("device", False)])
+def test_spec_decoder_matches_reference(smoke_model, sync, self_draft):
+    """Single-stream spec decoding is bit-identical to sequential greedy
+    decode for both sync arms, with a perfect (self) draft and with an
+    independent random-init draft."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(1)
+    spec = SpecConfig(k=3) if self_draft else \
+        SpecConfig(k=3, draft=_indep_draft_cfg())
+    sd = SpecDecoder(cfg, params, spec=spec, max_len=128, sync=sync,
+                     cache_dtype=jnp.float32)
+    for S, n in ((23, 11), (40, 6)):
+        prompt = rng.integers(0, cfg.vocab_size, S).astype(np.int32)
+        assert sd.generate(prompt, n) == _ref_generate(model, params,
+                                                       prompt, n)
+    sd.kv.assert_drained()               # every request closed cleanly
+    st = sd.stats()
+    assert st["verify_dispatches"] > 0
+    if self_draft:
+        assert st["acceptance_rate"] == 1.0
+        assert st["target_dispatches"] < st["emitted_tokens"]
+
+
+@pytest.mark.tier1
+def test_spec_decoder_long_generation_crosses_blocks(smoke_model):
+    """Regression: generation long enough to grow several blocks mid-decode
+    must stay bit-identical — the device block table has to be
+    re-snapshotted every round, or newly-grown positions alias into the
+    null block and collide modulo block_size."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    sd = SpecDecoder(cfg, params, spec=SpecConfig(k=3), max_len=200,
+                     block_size=16, cache_dtype=jnp.float32)
+    n = 100                                    # ~6 blocks grown mid-decode
+    assert sd.generate(prompt, n) == _ref_generate(model, params, prompt, n)
+    sd.kv.assert_drained()
+
+
+@pytest.mark.tier1
+def test_spec_decoder_eos_cut(smoke_model):
+    """An EOS inside an accepted run must cut the stream mid-round exactly
+    where sequential decode would stop."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 17).astype(np.int32)
+    free = _ref_generate(model, params, prompt, 10)
+    eos = free[4]                         # force a stop mid-stream
+    ref = _ref_generate(model, params, prompt, 10, eos_id=eos)
+    sd = SpecDecoder(cfg, params, spec=SpecConfig(k=4), max_len=128,
+                     eos_id=eos, cache_dtype=jnp.float32)
+    assert sd.generate(prompt, 10) == ref
+    sd.kv.assert_drained()
+
+
+def test_spec_config_validation(smoke_model):
+    cfg, _, params = smoke_model
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        SpecConfig(k=0).resolve_draft(cfg)
+    with pytest.raises(NotImplementedError, match="greedy"):
+        SpecConfig(greedy=False).resolve_draft(cfg)
+    with pytest.raises(ValueError, match="token space"):
+        SpecConfig(draft=cfg.with_(vocab_size=512)).resolve_draft(cfg)
+    with pytest.raises(ValueError, match="attention-family"):
+        SpecConfig(draft=get_smoke_config("rwkv6-3b").with_(
+            vocab_size=cfg.vocab_size)).resolve_draft(cfg)
+    # name resolution goes through the config registry
+    assert SpecConfig(draft="smollm-135m",
+                      smoke=True).resolve_draft(cfg).name == "smollm-smoke"
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        PagedBatcher(cfg, params, spec=2, mixed_batch=True,
+                     cache_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="greedy"):
+        PagedBatcher(cfg, params, spec=2,
+                     sampler=SamplerConfig(temperature=0.7),
+                     cache_dtype=jnp.float32)
+
+
+# ------------------------------------------------------- batcher spec mode --
+
+@pytest.mark.tier1
+def test_spec_batcher_fewer_target_dispatches(smoke_model):
+    """Self-draft spec mode emits the baseline's exact streams with
+    strictly fewer target dispatches, and the unified stats() counters are
+    mutually consistent."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (37, 20, 50)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=9)
+                for i, p in enumerate(prompts)]
+
+    kw = dict(num_blocks=25, block_size=16, max_blocks_per_seq=5,
+              decode_width=3, buckets=(32, 64), cache_dtype=jnp.float32)
+    base = PagedBatcher(cfg, params, sync="host", **kw)
+    rb = base.run(reqs())
+    pb = PagedBatcher(cfg, params, sync="host", spec=SpecConfig(k=3), **kw)
+    rs = pb.run(reqs())
+    assert all(a.output == b.output for a, b in zip(rb, rs))
+    pb.kv.assert_drained()
+    st, bs = pb.stats(), base.stats()
+    assert st["target_dispatches"] < bs["total_dispatches"]
+    assert st["acceptance_rate"] == 1.0
+    assert st["verify_dispatches"] == st["decode_dispatches"]
+    assert st["decode_steps"] == bs["decode_steps"]
+    assert st["drafted_tokens"] == st["spec_rounds"] * 3
+
+
+@pytest.mark.tier1
+def test_spec_batcher_engine_mode_verify_planned(smoke_model):
+    """spec + engine_mode: verification matmuls run the solver's VERIFY
+    decisions through the HeteroCtx — still token-identical (partitioning
+    is an execution schedule, never a numerics change)."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (33, 12)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=7)
+                for i, p in enumerate(prompts)]
+
+    kw = dict(num_blocks=16, block_size=16, max_blocks_per_seq=4,
+              decode_width=2, buckets=(32, 64), cache_dtype=jnp.float32)
+    base = PagedBatcher(cfg, params, sync="host", **kw)
+    rb = base.run(reqs())
+    pb = PagedBatcher(cfg, params, sync="host", spec=SpecConfig(k=2),
+                      engine_mode="hetero-tensor", **kw)
+    rs = pb.run(reqs())
+    assert all(a.output == b.output for a, b in zip(rb, rs))
+    pb.kv.assert_drained()
+    # the ctx carries VERIFY decisions for this scheduler's (k, lanes)
+    assert pb.ctx.plan.verify_decision("wq", 2, 2) is not None
+
+
+@pytest.mark.tier1
+def test_spec_batcher_eos_mid_round(smoke_model):
+    """EOS emitted inside an accepted run finishes the lane exactly where
+    the non-spec arm does."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 19).astype(np.int32)
+    free = _ref_generate(model, params, prompt, 12)
+    eos = free[5]
+
+    def reqs():
+        return [Request(rid=0, prompt=prompt, max_new_tokens=12)]
+
+    kw = dict(num_blocks=9, block_size=16, max_blocks_per_seq=4,
+              decode_width=1, buckets=(32, 64), cache_dtype=jnp.float32,
+              eos_id=eos)
+    base = PagedBatcher(cfg, params, sync="host", **kw)
+    rb = base.run(reqs())
+    pb = PagedBatcher(cfg, params, sync="host", spec=SpecConfig(k=4), **kw)
+    rs = pb.run(reqs())
+    assert rb[0].output == rs[0].output
+    assert rs[0].output[-1] == eos and eos not in rs[0].output[:-1]
+    pb.kv.assert_drained()
+
+
+# ------------------------------------------------------ VERIFY solver class --
+
+def test_solver_verify_decisions_and_roundtrip():
+    """build_plan(verify_ks=...) populates every site's VERIFY decisions in
+    their own key space, save/load round-trips them, and the analytic gain
+    of one M=lanes*(K+1) dispatch over K+1 M=lanes dispatches is positive
+    under host-sync dispatch costs."""
+    cfg = get_smoke_config("llama3-8b")
+    table, plan = build_plan(cfg, sync_mode="host",
+                             verify_ks=((4, 8), (2, 1)))
+    for site in table.sites:
+        for key in ((4, 8), (2, 1)):
+            dec = plan.verify_decision(site, *key)
+            assert dec is not None and "verify[k=" in dec.ratio
+            assert dec.M == key[1] * (key[0] + 1)
+        assert plan.verify_decision(site, 3, 1) is None   # unsolved shape
+    path = None
+    import tempfile
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as f:
+        path = f.name
+    plan.save(path)
+    loaded = PartitionPlan.load(path)
+    assert loaded.verify_decisions == plan.verify_decisions
+    solver = PartitionSolver(profile_analytic(cfg), sync_mode="host")
+    assert solver.verify_gain_us("w_gate", 4, lanes=8) > 0
+    # a verify decision never beats the unconstrained best for the same M:
+    # it IS the same search, keyed for the scheduler-chosen shape
+    d_v = solver.solve_verify("w_gate", 4, lanes=8)
+    d_m = solver.solve_site("w_gate", 8 * 5)
+    assert d_v.t_us == d_m.t_us and d_v.strategy == d_m.strategy
+
+
+def test_hetero_ctx_for_verify_resolves_verify_decisions():
+    """for_verify(k, lanes) views the same plan through the VERIFY key
+    space; matmul output is unchanged (schedule, not numerics)."""
+    cfg = get_smoke_config("llama3-8b")
+    ctx = build_hetero_ctx(cfg, "hetero-tensor", sync_mode="host",
+                           verify_ks=((2, 3),))
+    vctx = ctx.for_verify(2, 3)
+    assert vctx.verify_key == (2, 3) and ctx.verify_key is None
+    assert vctx.plan is ctx.plan
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(9, cfg.d_model)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(cfg.d_model, cfg.d_ff)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(vctx.matmul(x, w, name="w_gate")),
+                               np.asarray(x @ w), rtol=2e-4, atol=2e-4)
