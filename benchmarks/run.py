@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.bench_serve_sync",        # host-synced vs fused-window decode
     "benchmarks.bench_mixed_batch",       # stage-parallel prefill⊕decode fusion
     "benchmarks.bench_spec",              # speculative decoding vs plain decode
+    "benchmarks.bench_prefix",            # prefix caching vs cold prefill
     "benchmarks.roofline_report",         # §Roofline
 ]
 

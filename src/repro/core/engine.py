@@ -37,7 +37,8 @@ from .sync import generate_host_loop, generate_on_device
 
 def build_plan(cfg, *, sync_mode: str = "fast",
                table: Optional[LatencyTable] = None, mixed_pairs=(),
-               verify_ks=()) -> tuple[LatencyTable, PartitionPlan]:
+               verify_ks=(), extra_ms=()) -> tuple[LatencyTable,
+                                                   PartitionPlan]:
     """Offline phase (paper Fig 11 left half): profile the model's weight
     shapes, then solve the per-(site, M) partitioning decisions. Shared by
     the single-stream engine and the paged serving scheduler so both run
@@ -45,20 +46,23 @@ def build_plan(cfg, *, sync_mode: str = "fast",
     decode width) pairs the mixed-batch scheduler will fuse — solved into
     ``plan.mixed_decisions`` (strategy MIXED). ``verify_ks``: (k, lanes)
     speculative-verification shapes the spec decoder will dispatch —
-    solved into ``plan.verify_decisions`` (the VERIFY site class)."""
+    solved into ``plan.verify_decisions`` (the VERIFY site class).
+    ``extra_ms``: extra token counts added to the solve grid — the
+    prefix-cache scheduler's suffix-chunk lengths, so warm-path chunks get
+    first-class solved decisions."""
     table = table or profile_analytic(cfg)
     solver = PartitionSolver(table, sync_mode=sync_mode)
     return table, solver.solve(cfg, mixed_pairs=mixed_pairs,
-                               verify_ks=verify_ks)
+                               verify_ks=verify_ks, extra_ms=extra_ms)
 
 
 def build_hetero_ctx(cfg, mode: str, *, sync_mode: str = "fast",
                      interpret: bool = True, mixed_pairs=(),
-                     verify_ks=()) -> HeteroCtx:
+                     verify_ks=(), extra_ms=()) -> HeteroCtx:
     """Profile + solve + wrap in the HeteroCtx that models thread through
     every matmul site (including the LM head)."""
     _, plan = build_plan(cfg, sync_mode=sync_mode, mixed_pairs=mixed_pairs,
-                         verify_ks=verify_ks)
+                         verify_ks=verify_ks, extra_ms=extra_ms)
     return HeteroCtx(mode=mode, plan=plan, interpret=interpret)
 
 

@@ -258,15 +258,20 @@ class PartitionSolver:
     # ---- whole-model plan ---------------------------------------------------
     def solve(self, cfg, Ms=(1, 64, 128, 192, 256, 300, 320, 512, 1024,
                              2048, 4096), mixed_pairs=(),
-              verify_ks=()) -> PartitionPlan:
+              verify_ks=(), extra_ms=()) -> PartitionPlan:
         """``mixed_pairs``: (m_prefill, m_decode) serving pairs — the
         scheduler's (prefill chunk bucket, decode width) grid — solved per
         site into ``plan.mixed_decisions``. ``verify_ks``: (k, lanes)
         speculative-verification shapes, solved per site into
-        ``plan.verify_decisions``."""
+        ``plan.verify_decisions``. ``extra_ms``: additional token counts to
+        solve alongside the standard grid — the prefix-cache scheduler
+        passes its suffix-chunk lengths (block-size multiples below the
+        smallest bucket) so warm-path prefill chunks resolve to solved
+        decisions instead of the nearest-M fallback."""
         plan = PartitionPlan(arch=cfg.name, sync_mode=self.sync_mode)
+        all_ms = sorted(set(Ms) | set(extra_ms))
         for site in self.table.sites:
-            for M in Ms:
+            for M in all_ms:
                 plan.decisions[(site, M)] = self.solve_site(site, M)
             for (mp, md) in mixed_pairs:
                 plan.mixed_decisions[(site, mp, md)] = \

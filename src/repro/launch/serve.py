@@ -24,6 +24,12 @@ Paged mode fuses the engine into the serving path
                     --engine-mode)
   --spec-draft M    draft model config name (e.g. smollm-135m); omit for
                     self-speculation (the target drafts for itself)
+  --prefix-cache    automatic prefix caching: closed sequences retire full
+                    KV blocks into a content-hash cache, new admissions
+                    share matching blocks and prefill only the uncached
+                    suffix (pair with --shared-prefix to shape the
+                    workload; --decode-width < --requests staggers closes
+                    so later admissions actually hit)
   --stats           print the scheduler's unified stats() counter dict
 """
 from __future__ import annotations
@@ -78,6 +84,16 @@ def main(argv=None):
                     dest="spec_draft",
                     help="draft model config name (--spec-k; default: the "
                          "target drafts for itself)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    dest="prefix_cache",
+                    help="automatic prefix caching: closed sequences retire "
+                         "full KV blocks into a content-hash cache; new "
+                         "admissions share matching blocks and prefill only "
+                         "the uncached suffix (paged mode)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="LEN",
+                    dest="shared_prefix",
+                    help="give every request the same LEN-token system "
+                         "prompt prefix (the prefix-cache workload shape)")
     ap.add_argument("--stats", action="store_true",
                     help="print the scheduler's stats() counter dict")
     ap.add_argument("--requests", type=int, default=4)
@@ -85,11 +101,12 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
     if (args.sync == "device" or args.engine_mode or args.eos_id is not None
-            or args.mixed_batch or args.spec_k is not None) \
+            or args.mixed_batch or args.spec_k is not None
+            or args.prefix_cache) \
             and not (args.batched and args.paged):
         ap.error("--sync device / --engine-mode / --eos-id / --mixed-batch "
-                 "/ --spec-k apply to the paged batcher: add "
-                 "--batched --paged")
+                 "/ --spec-k / --prefix-cache apply to the paged batcher: "
+                 "add --batched --paged")
     if args.max_prefill_chunk is not None and not args.mixed_batch:
         ap.error("--max-prefill-chunk applies to --mixed-batch")
     if args.spec_draft is not None and args.spec_k is None:
@@ -127,7 +144,7 @@ def main(argv=None):
                               eos_id=args.eos_id,
                               mixed_batch=args.mixed_batch,
                               max_prefill_chunk_per_step=args.max_prefill_chunk,
-                              spec=spec)
+                              spec=spec, prefix_cache=args.prefix_cache)
             label = (f"paged (bs={args.block_size}, "
                      f"blocks={num_blocks}, W={args.decode_width}, "
                      f"sync={args.sync}"
@@ -136,16 +153,25 @@ def main(argv=None):
                      + (f", engine={args.engine_mode}" if args.engine_mode
                         else "")
                      + (", mixed" if args.mixed_batch else "")
+                     + (", prefix-cache" if args.prefix_cache else "")
                      + (f", spec k={args.spec_k} "
                         f"draft={args.spec_draft or 'self'}"
                         if spec else "") + ")")
         else:
             cb = ContinuousBatcher(cfg, max_batch=4, max_len=max_len)
             label = "batched"
+        if args.shared_prefix >= args.prompt_len - 8:
+            ap.error("--shared-prefix must leave at least 8 tokens of "
+                     "per-request tail below --prompt-len")
+        sys_prompt = rng.integers(0, cfg.vocab_size,
+                                  args.shared_prefix).astype(np.int32)
         reqs = [Request(rid=i,
-                        prompt=rng.integers(0, cfg.vocab_size,
-                                            rng.integers(8, args.prompt_len)
-                                            ).astype(np.int32),
+                        prompt=np.concatenate([
+                            sys_prompt,
+                            rng.integers(0, cfg.vocab_size,
+                                         rng.integers(8, args.prompt_len
+                                                      - args.shared_prefix)
+                                         ).astype(np.int32)]),
                         max_new_tokens=args.new_tokens)
                 for i in range(args.requests)]
         t0 = time.perf_counter()
@@ -169,6 +195,13 @@ def main(argv=None):
                       f"acceptance {s['acceptance_rate']:.2f} "
                       f"({s['accepted_tokens']}/{s['drafted_tokens']} drafts,"
                       f" draft={s['draft_model']})")
+            if args.prefix_cache:
+                s = cb.stats()
+                print(f"  prefix-cache: {s['prefix_hits']} hit admissions, "
+                      f"{s['prefix_tokens_reused']} prompt tokens reused, "
+                      f"{s['cached_blocks']} blocks retained, "
+                      f"{s['evictions']} evictions, "
+                      f"{s['cow_copies']} CoW copies")
         if args.stats:
             print(f"  stats: {cb.stats()}")
         return

@@ -250,10 +250,18 @@ def _run_layers_paged(params, x, cfg, *, positions, pool, block_table,
 def paged_prefill(params, tokens, pool, cfg, *, block_table, start_index=0,
                   unroll=False, hetero_ctx=None):
     """Prefill a prompt chunk into the request's pages. tokens: [B, S];
-    block_table: [B, NBmax]. Returns (last-token logits, updated pool)."""
+    block_table: [B, NBmax]. ``start_index`` is a scalar (uniform batches —
+    chunked prefill resuming at the chunk offset, or a cached-prefix suffix
+    resuming after the resident prefix) or [B] per-lane starts (the
+    ``paged_verify`` nonzero-start machinery, generalized here so batched
+    suffix prefill can resume each lane at its own cached-prefix length).
+    Returns (last-token logits, updated pool)."""
     S = tokens.shape[1]
     x = _embed(params, tokens, cfg)
-    positions = start_index + jnp.arange(S, dtype=jnp.int32)
+    start_index = jnp.asarray(start_index, jnp.int32)
+    steps = jnp.arange(S, dtype=jnp.int32)
+    positions = (start_index[:, None] + steps[None, :]
+                 if start_index.ndim == 1 else start_index + steps)
     x, pool = _run_layers_paged(params, x, cfg, positions=positions,
                                 pool=pool, block_table=block_table,
                                 unroll=unroll, hetero_ctx=hetero_ctx)

@@ -8,7 +8,8 @@ memory and concurrency is capped at ``max_batch`` regardless of actual
 lengths. Here the cache is a shared pool of fixed-size token blocks:
 
   * pool tensors ``k``/``v``: ``[L, num_blocks, block_size, Hkv, D]``;
-  * a host-side free-list :class:`BlockAllocator` hands blocks to requests;
+  * a host-side refcounted free-list :class:`BlockAllocator` hands blocks
+    to requests;
   * each request owns a **block table** (``[max_blocks_per_seq]`` int32 of
     pool block ids) mapping logical token position ``t`` to physical slot
     ``table[t // block_size] * block_size + t % block_size``;
@@ -21,22 +22,54 @@ it, so gathers are always in-bounds (garbage there is masked positionally by
 the causal mask, exactly how the dense path masks unwritten slots) and
 inactive decode lanes harmlessly sink their writes into it.
 
-Allocator invariants (asserted):
+Allocator invariants (enforced — misuse raises, never corrupts):
   * block 0 is never handed out and never freed;
-  * a block is owned by at most one request at a time;
-  * ``free + outstanding == num_blocks - 1`` at all times.
+  * every non-null block is in exactly one of three states: FREE (on the
+    free list), OWNED (refcount >= 1 — held by one or more sequences), or
+    CACHED (refcount 0 but retained by the prefix cache, reclaimable);
+  * ``free + owned + cached == num_blocks - 1`` at all times;
+  * freeing the null block, an unowned block, or an already-free block
+    raises :class:`BlockAccountingError` instead of silently corrupting
+    the accounting.
 
 Growth is two-phase (``open_sequence`` reserves, ``grow_to`` draws on the
 reservation) and reversible: ``truncate_to`` rolls a sequence back to an
 accepted token prefix, returning whole blocks past it to the free list while
 keeping them inside the reservation — the speculative-decoding rollback
 primitive (serving/spec.py).
+
+Automatic prefix caching (``prefix_cache=True``, the dominant on-device
+pattern of thousands of requests sharing one system prompt):
+
+  * every FULL block of a finished sequence is indexed by a **content hash
+    chained over its token ids**
+    (``h_i = SHA256(h_{i-1} || tokens[i*bs:(i+1)*bs])`` — the chain makes
+    the digest position- and prefix-dependent, so equal token windows at
+    different prefixes never collide, and the cryptographic digest makes
+    the key a faithful stand-in for the tokens themselves);
+  * ``close_sequence`` RETIRES blocks to the cache instead of freeing them:
+    a retired block whose refcount drops to 0 parks in an LRU of evictable
+    cached blocks, its KV contents intact;
+  * ``open_sequence`` walks the new prompt's chain hashes and SHARES every
+    consecutively-matching physical block (refcount + 1, or reactivated out
+    of the LRU), so prefill only has to run the uncached suffix;
+  * cached blocks are **immutable** while registered: when a hit covers the
+    entire prompt, the sequence still needs last-token logits, so the final
+    cached block is **copied-on-write** into a private block before the
+    1-token suffix re-runs — a shared block is never written by two owners;
+  * allocation pressure reclaims refcount-0 cached blocks in LRU order
+    (``evictions`` counts them) — ``OutOfBlocks`` is only raised once the
+    free list AND the evictable cache are exhausted.
 """
 from __future__ import annotations
 
+import hashlib
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
+from functools import partial
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -45,36 +78,115 @@ class OutOfBlocks(RuntimeError):
     """Raised when an allocation cannot be satisfied from the free list."""
 
 
+class BlockAccountingError(RuntimeError):
+    """Raised on allocator misuse (double free, freeing the null block,
+    touching a block in the wrong state) — loud failure instead of silently
+    corrupting the ``free + owned + cached == num_blocks - 1`` invariant."""
+
+
 class BlockAllocator:
-    """Free-list allocator over pool blocks ``1..num_blocks-1`` (0 = null)."""
+    """Refcounted free-list allocator over pool blocks ``1..num_blocks-1``
+    (0 = null). ``alloc`` hands out blocks at refcount 1; ``incref`` lets a
+    second sequence share a block (prefix caching); ``free``/``retire``
+    drop a reference — a block leaves the OWNED state only when its
+    refcount hits 0, landing on the free list (``free``) or in the CACHED
+    set (``retire``, prefix-cache retention). ``reactivate`` pulls a CACHED
+    block back to OWNED on a cache hit; ``evict`` returns it to the free
+    list under allocation pressure."""
 
     def __init__(self, num_blocks: int):
         assert num_blocks >= 2, "need at least one allocatable block"
         self.num_blocks = num_blocks
         self._free: list[int] = list(range(num_blocks - 1, 0, -1))
-        self._owned: set[int] = set()
+        self._ref: dict[int, int] = {}      # OWNED: block -> refcount >= 1
+        self._cached: set[int] = set()      # CACHED: refcount 0, retained
+        self.total_allocs = 0               # fresh blocks handed out, ever
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
             raise OutOfBlocks(f"requested {n} blocks, {len(self._free)} free")
         out = [self._free.pop() for _ in range(n)]
-        self._owned.update(out)
+        for b in out:
+            self._ref[b] = 1
+        self.total_allocs += n
         return out
 
+    def incref(self, block: int) -> None:
+        """Share an OWNED block with one more sequence (prefix-cache hit on
+        a block whose original owner is still live)."""
+        if block not in self._ref:
+            raise BlockAccountingError(f"incref of unowned block {block}")
+        self._ref[block] += 1
+
+    def _drop_ref(self, block: int) -> bool:
+        """Drop one reference; True iff the refcount hit 0."""
+        if block == 0:
+            raise BlockAccountingError("null block must never be freed")
+        if block not in self._ref:
+            state = ("free" if block in self._free else
+                     "cached" if block in self._cached else "unknown")
+            raise BlockAccountingError(
+                f"double free of block {block} (state: {state})")
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            del self._ref[block]
+            return True
+        return False
+
     def free(self, blocks: list[int]) -> None:
+        """Drop one reference per block; zero-ref blocks return to the free
+        list. Raises :class:`BlockAccountingError` on the null block or a
+        block not currently owned (double free)."""
         for b in blocks:
-            assert b != 0, "null block must never be freed"
-            assert b in self._owned, f"double free of block {b}"
-            self._owned.remove(b)
+            if self._drop_ref(b):
+                self._free.append(b)
+
+    def retire(self, blocks: list[int]) -> list[int]:
+        """Drop one reference per block; zero-ref blocks move to the CACHED
+        set (prefix-cache retention) instead of the free list. Returns the
+        blocks that became cached (still-shared blocks stay OWNED)."""
+        newly_cached = []
+        for b in blocks:
+            if self._drop_ref(b):
+                self._cached.add(b)
+                newly_cached.append(b)
+        return newly_cached
+
+    def reactivate(self, block: int) -> None:
+        """CACHED -> OWNED at refcount 1 (prefix-cache hit on an evictable
+        block)."""
+        if block not in self._cached:
+            raise BlockAccountingError(f"reactivate of non-cached {block}")
+        self._cached.remove(block)
+        self._ref[block] = 1
+
+    def evict(self, blocks: list[int]) -> None:
+        """CACHED -> FREE (allocation-pressure reclaim)."""
+        for b in blocks:
+            if b not in self._cached:
+                raise BlockAccountingError(f"evict of non-cached block {b}")
+            self._cached.remove(b)
             self._free.append(b)
 
     def check(self) -> None:
-        assert len(self._free) + len(self._owned) == self.num_blocks - 1
-        assert 0 not in self._owned and 0 not in self._free
+        assert (len(self._free) + len(self._ref) + len(self._cached)
+                == self.num_blocks - 1)
+        assert 0 not in self._ref and 0 not in self._free
+        assert 0 not in self._cached
+        assert not self._cached & set(self._free)
+        assert not (self._cached | set(self._free)) & set(self._ref)
+        assert all(r >= 1 for r in self._ref.values())
 
 
 @dataclass
@@ -84,10 +196,25 @@ class SequenceBlocks:
     blocks: list = field(default_factory=list)   # allocated pool block ids
     length: int = 0                    # tokens written so far
     reserved: int = 0                  # blocks admission promised (incl. held)
+    cached_tokens: int = 0             # prefix tokens served from the cache
+    n_shared: int = 0                  # leading blocks shared with the cache
 
     def append_block(self, block_id: int) -> None:
         self.table[len(self.blocks)] = block_id
         self.blocks.append(block_id)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _cow_copy(pool: dict, src, dst) -> dict:
+    """Copy one pool block's KV pages ``src`` -> ``dst`` across all layers
+    (the copy-on-write primitive). src/dst are traced scalars, so every
+    (src, dst) pair reuses one compiled graph."""
+    out = dict(pool)
+    for key in ("k", "v"):
+        page = jnp.take(pool[key], src[None], axis=1)      # [L, 1, bs, H, D]
+        out[key] = jax.lax.dynamic_update_slice_in_dim(
+            pool[key], page, dst, axis=1)
+    return out
 
 
 class PagedKVCache:
@@ -97,10 +224,19 @@ class PagedKVCache:
     ``[L, num_blocks, block_size, Hkv, D]``); scheduler code threads that
     dict through the jitted paged prefill/decode functions and stores the
     donated result back.
+
+    With ``prefix_cache=True`` the pool additionally runs automatic prefix
+    caching (module docstring): pass the prompt's token ids to
+    ``open_sequence`` and the returned sequence may start with
+    ``cached_tokens`` positions already resident (``seq.cached_tokens`` —
+    prefill only the suffix), and pass the written token stream to
+    ``close_sequence`` so full blocks retire into the hash-indexed cache
+    for future requests.
     """
 
     def __init__(self, cfg, *, num_blocks: int, block_size: int = 32,
-                 max_blocks_per_seq: int | None = None, dtype=jnp.bfloat16):
+                 max_blocks_per_seq: int | None = None, dtype=jnp.bfloat16,
+                 prefix_cache: bool = False):
         from repro.models import transformer
         self.cfg = cfg
         self.block_size = block_size
@@ -112,6 +248,17 @@ class PagedKVCache:
             cfg, num_blocks=num_blocks, block_size=block_size, dtype=dtype)
         self.allocator = BlockAllocator(num_blocks)
         self._reserved_unheld = 0      # promised at admission, not yet alloc'd
+        self.prefix_cache = prefix_cache
+        # content-hash index over CLOSED full blocks (chained, see module
+        # docstring) + LRU over the refcount-0 subset (eviction order)
+        self._block_of_hash: dict = {}           # chain hash -> block id
+        self._hash_of_block: dict = {}           # block id  -> chain hash
+        self._lru: OrderedDict = OrderedDict()   # refcount-0 cached, LRU
+        # observability (surfaced by PagedBatcher.stats())
+        self.prefix_hits = 0           # admissions that reused >= 1 block
+        self.prefix_tokens_reused = 0  # prompt tokens served from the cache
+        self.evictions = 0             # cached blocks reclaimed for space
+        self.cow_copies = 0            # copy-on-write block duplications
 
     # ------------------------------------------------------------- sizing --
     def blocks_for(self, n_tokens: int) -> int:
@@ -119,19 +266,124 @@ class PagedKVCache:
 
     @property
     def n_free_unreserved(self) -> int:
-        """Blocks available to NEW admissions (free minus outstanding IOUs)."""
-        return self.allocator.n_free - self._reserved_unheld
+        """Blocks available to NEW admissions (free plus evictable cached,
+        minus outstanding IOUs): a cached block is real capacity — pressure
+        reclaims it — so retention never shrinks the admissible pool."""
+        return (self.allocator.n_free + self.allocator.n_cached
+                - self._reserved_unheld)
 
     def can_admit(self, n_tokens: int) -> bool:
         need = self.blocks_for(n_tokens)
         return (need <= self.max_blocks_per_seq
                 and need <= self.n_free_unreserved)
 
+    # ------------------------------------------------------ prefix cache --
+    def _chain_hashes(self, token_ids, n_full: int) -> list:
+        """Chained content digests of the first ``n_full`` full blocks of
+        ``token_ids``: ``h_i = SHA256(h_{i-1} || block_i_tokens)``. Prefix-
+        dependent by construction, so a hit at block i certifies the whole
+        prefix [0, (i+1)*block_size). SHA-256 rather than Python ``hash``
+        because a hit hands another request's KV to this one with no
+        further token comparison: a 64-bit non-cryptographic hash would
+        make silent cross-request KV confusion craftable (and merely
+        unlucky at fleet scale), a cryptographic digest makes the index
+        key a faithful stand-in for the tokens themselves."""
+        bs = self.block_size
+        h, out = b"%d" % self.block_size, []
+        for i in range(n_full):
+            block = np.asarray(token_ids[i * bs:(i + 1) * bs], np.int64)
+            h = hashlib.sha256(h + block.tobytes()).digest()
+            out.append(h)
+        return out
+
+    def _acquire_cached(self, block: int) -> None:
+        """Take a reference on a hash-registered block: reactivate it out of
+        the LRU if nobody holds it, otherwise share the live owner's copy."""
+        if block in self._lru:
+            del self._lru[block]
+            self.allocator.reactivate(block)
+        else:
+            self.allocator.incref(block)
+
+    def _release(self, blocks: list[int]) -> None:
+        """Drop one reference per block, routing by registration: hash-
+        registered blocks RETIRE (refcount 0 -> CACHED + LRU tail, contents
+        retained for future hits), unregistered blocks free normally."""
+        registered = [b for b in blocks if b in self._hash_of_block]
+        plain = [b for b in blocks if b not in self._hash_of_block]
+        if plain:
+            self.allocator.free(plain)
+        for b in self.allocator.retire(registered):
+            self._lru[b] = None                  # most-recently-retired last
+
+    def _reclaim(self, n: int) -> None:
+        """Evict up to ``n`` refcount-0 cached blocks, least recently used
+        first, unregistering their hashes. Stops early if the LRU drains
+        (the subsequent ``alloc`` then raises OutOfBlocks)."""
+        while n > 0 and self._lru:
+            b, _ = self._lru.popitem(last=False)
+            h = self._hash_of_block.pop(b)
+            del self._block_of_hash[h]
+            self.allocator.evict([b])
+            self.evictions += 1
+            n -= 1
+
+    def _alloc(self, n: int) -> list[int]:
+        """Allocate ``n`` fresh blocks, evicting cached blocks on pressure."""
+        if n > self.allocator.n_free:
+            self._reclaim(n - self.allocator.n_free)
+        return self.allocator.alloc(n)
+
+    def _match_prefix(self, seq: SequenceBlocks, token_ids,
+                      prompt_tokens: int) -> None:
+        """Walk the prompt's chain hashes, sharing every consecutively-
+        matching cached block into ``seq``. Sets ``seq.cached_tokens`` (the
+        resident prefix prefill can skip) and ``seq.n_shared``. When the
+        match covers the WHOLE prompt the last matched block is copied on
+        write (a private duplicate) so the 1-token logits re-run never
+        writes a shared block — ``cached_tokens`` is then ``prompt - 1``."""
+        bs = self.block_size
+        hits = []
+        for h in self._chain_hashes(token_ids, prompt_tokens // bs):
+            b = self._block_of_hash.get(h)
+            if b is None:
+                break
+            hits.append(b)
+        if not hits:
+            return
+        cow = len(hits) * bs == prompt_tokens
+        for b in (hits[:-1] if cow else hits):
+            self._acquire_cached(b)
+            seq.append_block(b)
+        seq.n_shared = len(seq.blocks)
+        if cow:
+            # full-prompt hit: last-token logits still need one forward
+            # step writing position prompt-1, which lands INSIDE the last
+            # cached block — duplicate it first (immutability of cached
+            # blocks: a shared block is never written by two owners)
+            src = hits[-1]
+            self._acquire_cached(src)            # pin against eviction
+            dst = self._alloc(1)[0]
+            self.pool = _cow_copy(self.pool, jnp.asarray(src, jnp.int32),
+                                  jnp.asarray(dst, jnp.int32))
+            self._release([src])                 # drop the pin
+            seq.append_block(dst)
+            self.cow_copies += 1
+            seq.cached_tokens = prompt_tokens - 1
+        else:
+            seq.cached_tokens = len(hits) * bs
+        self.prefix_hits += 1
+        self.prefix_tokens_reused += seq.cached_tokens
+
     # ---------------------------------------------------------- lifecycle --
-    def open_sequence(self, prompt_tokens: int, total_tokens: int
-                      ) -> SequenceBlocks:
+    def open_sequence(self, prompt_tokens: int, total_tokens: int,
+                      token_ids=None) -> SequenceBlocks:
         """Admit a request: allocate prompt blocks now, reserve the rest so
-        decode-time growth (`maybe_grow`) can never fail mid-flight."""
+        decode-time growth (`maybe_grow`) can never fail mid-flight. With
+        the prefix cache on and ``token_ids`` given, consecutive full
+        blocks matching the cache are SHARED instead of allocated —
+        ``seq.cached_tokens`` positions are already resident and prefill
+        may start there."""
         need = self.blocks_for(total_tokens)
         now = self.blocks_for(prompt_tokens)
         if need > self.n_free_unreserved or need > self.max_blocks_per_seq:
@@ -140,9 +392,12 @@ class PagedKVCache:
         seq = SequenceBlocks(
             table=np.zeros((self.max_blocks_per_seq,), np.int32),
             reserved=need)
-        for b in self.allocator.alloc(now):
+        if self.prefix_cache and token_ids is not None and prompt_tokens > 0:
+            assert len(token_ids) == prompt_tokens
+            self._match_prefix(seq, token_ids, prompt_tokens)
+        for b in self._alloc(now - len(seq.blocks)):
             seq.append_block(b)
-        self._reserved_unheld += need - now
+        self._reserved_unheld += need - len(seq.blocks)
         return seq
 
     def grow_to(self, seq: SequenceBlocks, n_tokens: int) -> int:
@@ -156,7 +411,7 @@ class PagedKVCache:
         grown = 0
         while len(seq.blocks) < need:
             assert len(seq.blocks) < seq.reserved, "grew past reservation"
-            seq.append_block(self.allocator.alloc(1)[0])
+            seq.append_block(self._alloc(1)[0])
             self._reserved_unheld -= 1
             grown += 1
         return grown
@@ -177,8 +432,13 @@ class PagedKVCache:
         ``_reserved_unheld`` grows by the freed count), so a later
         ``grow_to`` can always re-cover the rolled-back positions — rollback
         never strands a request mid-flight. Frees are block-granular:
-        a partially-filled tail block is kept. Returns the number of blocks
-        freed."""
+        a partially-filled tail block is kept. Rolling back INTO the shared
+        cached prefix is unsupported (accepted prefixes always cover the
+        prompt, which covers the shared blocks)."""
+        if n_tokens < seq.cached_tokens:
+            raise ValueError(
+                f"truncate_to({n_tokens}) would roll back into the shared "
+                f"cached prefix ({seq.cached_tokens} tokens)")
         keep = 0 if n_tokens <= 0 else self.blocks_for(n_tokens)
         freed = seq.blocks[keep:]
         if freed:
@@ -189,21 +449,46 @@ class PagedKVCache:
         seq.length = min(seq.length, n_tokens)
         return len(freed)
 
-    def close_sequence(self, seq: SequenceBlocks) -> None:
-        self.allocator.free(seq.blocks)
+    def close_sequence(self, seq: SequenceBlocks, token_ids=None) -> None:
+        """Return the sequence's references. With the prefix cache on and
+        the WRITTEN token stream given (prompt + generated tokens, length
+        ``seq.length`` — KV position p holds the stream's p-th token in
+        every serving mode), full blocks register under their chain hash
+        and RETIRE into the cache (refcount 0 -> evictable LRU, contents
+        retained) instead of freeing; the partial tail block and any block
+        whose hash is already served by another physical block free
+        normally."""
+        if self.prefix_cache and token_ids is not None:
+            n_full = min(seq.length, len(token_ids)) // self.block_size
+            n_full = min(n_full, len(seq.blocks))
+            for i, h in enumerate(self._chain_hashes(token_ids, n_full)):
+                b = seq.blocks[i]
+                if b in self._hash_of_block:
+                    continue                     # shared hit: already indexed
+                if h in self._block_of_hash:
+                    continue                     # duplicate content: free it
+                self._block_of_hash[h] = b
+                self._hash_of_block[b] = h
+        self._release(seq.blocks)
         self._reserved_unheld -= seq.reserved - len(seq.blocks)
         seq.blocks = []
         seq.reserved = 0
+        seq.n_shared = 0
         seq.table[:] = 0
         self.allocator.check()
 
     def assert_drained(self) -> None:
         """Leak check after the scheduler drains: every block is back in the
-        free list and no admission reservation is outstanding. Run by the
-        scheduler fuzz/conformance tests after every arm."""
+        free list or parked refcount-0 in the prefix cache (reclaimable on
+        demand — retention is not a leak), and no admission reservation is
+        outstanding. Run by the scheduler fuzz/conformance tests after
+        every arm."""
         self.allocator.check()
-        held = self.num_blocks - 1 - self.allocator.n_free
+        held = (self.num_blocks - 1 - self.allocator.n_free
+                - self.allocator.n_cached)
         assert held == 0, f"{held} pool blocks leaked after drain"
+        assert self.allocator.n_cached == len(self._lru), (
+            "cached blocks out of sync with the eviction LRU")
         assert self._reserved_unheld == 0, \
             f"{self._reserved_unheld} reserved-unheld blocks leaked"
 
@@ -214,5 +499,16 @@ class PagedKVCache:
         return self.num_blocks * self.block_size
 
     def utilization(self) -> float:
-        held = self.num_blocks - 1 - self.allocator.n_free
+        held = (self.num_blocks - 1 - self.allocator.n_free
+                - self.allocator.n_cached)
         return held / max(self.num_blocks - 1, 1)
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache counter snapshot (merged into PagedBatcher.stats)."""
+        return {
+            "prefix_hits": self.prefix_hits,
+            "prefix_tokens_reused": self.prefix_tokens_reused,
+            "evictions": self.evictions,
+            "cow_copies": self.cow_copies,
+            "cached_blocks": self.allocator.n_cached,
+        }

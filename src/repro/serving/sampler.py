@@ -18,10 +18,17 @@ class SamplerConfig:
 def filter_logits(logits: jax.Array, cfg: SamplerConfig) -> jax.Array:
     """Temperature-scale then mask logits outside the top-k / top-p support
     to -inf. logits [B, V] -> [B, V]. Applied before categorical sampling;
-    split out so tests can assert the support sets directly."""
-    logits = logits / cfg.temperature
+    split out so tests can assert the support sets directly.
+
+    Temperature 0 means greedy (``sample`` argmaxes without calling here),
+    so a direct call must not divide by it — scaling only applies when
+    ``temperature > 0``. ``top_k`` is clamped to the vocab size: k >= V
+    keeps every token rather than indexing out of range."""
+    if cfg.temperature > 0.0:
+        logits = logits / cfg.temperature
     if cfg.top_k:
-        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        k = min(cfg.top_k, logits.shape[-1])
+        kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     if cfg.top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]

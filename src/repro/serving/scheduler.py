@@ -223,7 +223,8 @@ class _Admission:
     req: Request
     seq: SequenceBlocks
     chunks: list                       # remaining chunk lengths
-    idx: int = 0                       # prompt tokens prefilled so far
+    idx: int = 0                       # prompt tokens resident so far
+    #                                    (cache-hit prefix + prefilled)
 
 
 class PagedBatcher:
@@ -273,6 +274,17 @@ class PagedBatcher:
     scan under ``sync='device'``; the TARGET pays one dispatch per round
     either way, which is the counter the benches compare. Mutually
     exclusive with ``mixed_batch`` (both re-purpose the step loop).
+
+    ``prefix_cache=True`` turns on automatic prefix caching
+    (serving/paged_cache.py): closed sequences retire their full blocks
+    into a chain-hash-indexed cache instead of freeing them, admission
+    shares every consecutively-matching block (refcounted, copy-on-write
+    when the hit covers the whole prompt), and prefill runs only the
+    uncached suffix — strictly fewer prefill dispatches and fresh-block
+    allocations on shared-system-prompt traffic, with greedy outputs
+    bit-identical to the cold path (cached KV was computed from the same
+    tokens at the same positions). Eviction is LRU over refcount-0 cached
+    blocks, so retention never reduces admissible capacity.
     """
 
     def __init__(self, cfg, params=None, *, num_blocks: int = 65,
@@ -284,7 +296,8 @@ class PagedBatcher:
                  mixed_batch: bool = False,
                  max_prefill_chunk_per_step: int | None = None,
                  spec: SpecConfig | int | None = None,
-                 spec_draft_params=None, interpret: bool = True):
+                 spec_draft_params=None, interpret: bool = True,
+                 prefix_cache: bool = False):
         if sync not in ("host", "device"):
             raise ValueError(f"sync must be 'host' or 'device', got {sync!r}")
         if window < 1:
@@ -309,11 +322,13 @@ class PagedBatcher:
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
         self.block_size = block_size
+        self.prefix_cache = prefix_cache
         self.kv = PagedKVCache(
             cfg, num_blocks=num_blocks, block_size=block_size,
             max_blocks_per_seq=max_blocks_per_seq,
             dtype=(cache_dtype if cache_dtype is not None
-                   else jnp.dtype(cfg.compute_dtype)))
+                   else jnp.dtype(cfg.compute_dtype)),
+            prefix_cache=prefix_cache)
         self.W = decode_width
         self.buckets = tuple(sorted(buckets))
         self.sampler = sampler
@@ -352,6 +367,16 @@ class PagedBatcher:
                 # this scheduler issues in spec mode
                 verify_ks=(((spec.k, decode_width),)
                            if spec is not None else ()),
+                # prefix caching introduces one NEW chunk-length family:
+                # suffixes start at block boundaries, so block-MULTIPLE
+                # chunks below the smallest bucket become common — add
+                # them to the solve grid (the M=1 full-hit logits re-run
+                # is already on it). Ragged suffix tails remain arbitrary
+                # lengths and use the same nearest-M fallback the cold
+                # path's ragged remainders always used.
+                extra_ms=(tuple(range(block_size, min(self.buckets),
+                                      block_size))
+                          if prefix_cache else ()),
                 interpret=interpret)
         else:
             self.ctx = None
@@ -434,6 +459,7 @@ class PagedBatcher:
             "fused_steps": self.fused_steps,
             "total_dispatches": self.total_dispatches,
         }
+        s.update(self.kv.prefix_stats())
         if self.spec is not None:
             s.update({
                 "spec_k": self.spec.k,
@@ -477,7 +503,9 @@ class PagedBatcher:
                 " per request — raise num_blocks/max_blocks_per_seq")
         if not self.kv.can_admit(total):
             return None
-        return self.kv.open_sequence(prompt_tokens=S, total_tokens=total)
+        return self.kv.open_sequence(
+            prompt_tokens=S, total_tokens=total,
+            token_ids=req.prompt if self.prefix_cache else None)
 
     def _place(self, req: Request, seq: SequenceBlocks, first: int) -> int:
         """Prefill done: record the prefill-sampled token and occupy a lane
@@ -493,7 +521,10 @@ class PagedBatcher:
 
     def _admit(self):
         """Admit-then-decode (the baseline arm): whole prompts prefill as
-        their own chunk dispatches before the request joins a lane."""
+        their own chunk dispatches before the request joins a lane. With
+        the prefix cache on, ``seq.cached_tokens`` positions are already
+        resident (shared blocks) and prefill covers only the uncached
+        suffix — chunking starts at the cached boundary."""
         for lane in range(self.W):
             if self.lanes[lane] is not None or not self.queue:
                 continue
@@ -502,8 +533,9 @@ class PagedBatcher:
                 break                    # FCFS: wait for blocks to free
             req = self.queue.pop(0)
             bt = jnp.asarray(seq.table)[None]
-            idx, logits = 0, None
-            for c in bucket_chunks(len(req.prompt), self.buckets):
+            idx, logits = seq.cached_tokens, None
+            for c in bucket_chunks(len(req.prompt) - seq.cached_tokens,
+                                   self.buckets):
                 piece = jnp.asarray(req.prompt[idx: idx + c], jnp.int32)
                 logits, self.kv.pool = self._prefill(
                     self.params, piece[None], self.kv.pool, block_table=bt,
@@ -532,8 +564,9 @@ class PagedBatcher:
             return
         req = self.queue.pop(0)
         self._admitting = _Admission(
-            req=req, seq=seq,
-            chunks=bucket_chunks(len(req.prompt), self.admit_buckets))
+            req=req, seq=seq, idx=seq.cached_tokens,
+            chunks=bucket_chunks(len(req.prompt) - seq.cached_tokens,
+                                 self.admit_buckets))
 
     def _admission_chunk(self):
         """Pop the admitting request's next chunk as device operands:
@@ -557,7 +590,16 @@ class PagedBatcher:
     def _finish(self, lane: int):
         st = self.lanes[lane]
         st.req.done = True
-        self.kv.close_sequence(st.seq)
+        ids = None
+        if self.prefix_cache:
+            # the written token stream: KV position p holds the p-th token
+            # of prompt + output in every serving mode (the last sampled
+            # token's KV is never written, so slice to seq.length) — what
+            # close_sequence hashes to retire full blocks into the cache
+            ids = np.concatenate([
+                np.asarray(st.req.prompt, np.int64),
+                np.asarray(st.req.output, np.int64)])[:st.seq.length]
+        self.kv.close_sequence(st.seq, token_ids=ids)
         self.lanes[lane] = None
 
     # ----------------------------------------------------------------- run --

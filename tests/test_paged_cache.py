@@ -7,8 +7,8 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.serving.paged_cache import (BlockAllocator, OutOfBlocks,
-                                       PagedKVCache)
+from repro.serving.paged_cache import (BlockAccountingError, BlockAllocator,
+                                       OutOfBlocks, PagedKVCache)
 from repro.serving.scheduler import ContinuousBatcher, PagedBatcher, Request
 
 
@@ -53,12 +53,18 @@ def test_allocator_exhaustion_and_reuse():
     a.check()
 
 
-def test_allocator_double_free_asserts():
+def test_allocator_double_free_raises():
+    """Hardened free: a double free (or freeing the null block) raises
+    BlockAccountingError instead of silently corrupting the accounting —
+    works under ``python -O`` too, unlike the assert it replaced."""
     a = BlockAllocator(4)
     b = a.alloc(1)
     a.free(b)
-    with pytest.raises(AssertionError):
+    with pytest.raises(BlockAccountingError):
         a.free(b)
+    with pytest.raises(BlockAccountingError):
+        a.free([0])
+    a.check()                           # invariant survived the misuse
 
 
 def test_cache_reservation_accounting(smoke_model):

@@ -1,0 +1,402 @@
+"""Automatic prefix caching: refcounted allocator state machine, chained
+block hashing, copy-on-write immutability, LRU eviction under pressure, and
+the end-to-end serving property (suffix-only prefill, bit-exact outputs).
+
+The correctness contract under test:
+  * a hash-registered (cached) block is IMMUTABLE — it is never written by
+    a sequence that merely shares it (copy-on-write duplicates first);
+  * retention is not a leak — ``assert_drained`` holds with blocks parked
+    refcount-0 in the cache, and eviction restores a fully-free pool;
+  * reuse is an allocation-policy change, never a numerics change — warm
+    greedy outputs match the cold path token for token.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.paged_cache import (BlockAccountingError, BlockAllocator,
+                                       OutOfBlocks, PagedKVCache)
+from repro.serving.scheduler import PagedBatcher, Request
+
+BS = 16
+
+# smoke_model: session-scoped fixture from conftest.py
+
+
+def _ref_generate(model, params, prompt, n):
+    cache = model.init_cache(batch=1, max_len=256, dtype=jnp.float32)
+    logits, cache = model.prefill(params, jnp.asarray(prompt)[None], cache)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n - 1):
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def _tokens(seed, n, vocab=97):
+    return np.random.default_rng(seed).integers(0, vocab, n).astype(np.int32)
+
+
+# ------------------------------------------------- refcounted allocator --
+
+def test_allocator_refcount_share_and_release():
+    """incref lets two owners hold a block; it only leaves OWNED when the
+    last reference drops."""
+    a = BlockAllocator(6)
+    (b,) = a.alloc(1)
+    a.incref(b)
+    assert a.refcount(b) == 2
+    a.free([b])
+    assert a.refcount(b) == 1 and a.n_free == 4     # still owned
+    a.free([b])
+    assert a.refcount(b) == 0 and a.n_free == 5     # now actually free
+    a.check()
+
+
+def test_allocator_retire_reactivate_evict_cycle():
+    """OWNED -> CACHED (retire at refcount 0) -> OWNED (reactivate on a
+    hit) and CACHED -> FREE (evict) keep the three-state invariant."""
+    a = BlockAllocator(6)
+    b1, b2 = a.alloc(2)
+    assert a.retire([b1]) == [b1]                   # 1 -> 0: cached
+    assert a.n_cached == 1 and a.n_free == 3
+    a.incref(b2)
+    assert a.retire([b2]) == []                     # 2 -> 1: stays owned
+    a.check()
+    a.reactivate(b1)
+    assert a.n_cached == 0 and a.refcount(b1) == 1
+    assert a.retire([b1]) == [b1]
+    a.evict([b1])
+    assert a.n_free == 4 and a.n_cached == 0
+    a.free([b2])                                    # retire dropped 2 -> 1
+    a.check()
+    assert a.n_free == 5
+
+
+def test_allocator_free_raises_on_null_and_double_free():
+    """Hardened free: the null block and unowned blocks raise instead of
+    silently corrupting the free+owned+cached accounting."""
+    a = BlockAllocator(4)
+    with pytest.raises(BlockAccountingError, match="null block"):
+        a.free([0])
+    (b,) = a.alloc(1)
+    a.free([b])
+    with pytest.raises(BlockAccountingError, match="double free"):
+        a.free([b])
+    with pytest.raises(BlockAccountingError, match="double free"):
+        a.free([3])                                  # never allocated
+    a.check()                                        # accounting intact
+
+
+def test_allocator_misuse_raises_in_every_state():
+    a = BlockAllocator(4)
+    (b,) = a.alloc(1)
+    with pytest.raises(BlockAccountingError):
+        a.incref(2)                                  # incref of free block
+    with pytest.raises(BlockAccountingError):
+        a.reactivate(b)                              # owned, not cached
+    with pytest.raises(BlockAccountingError):
+        a.evict([b])                                 # owned, not cached
+    a.retire([b])
+    with pytest.raises(BlockAccountingError, match="double free"):
+        a.free([b])                                  # cached, not owned
+    a.evict([b])
+    a.check()
+
+
+# ----------------------------------------------------- hit / share / CoW --
+
+def test_close_registers_and_reopen_shares_blocks(smoke_model):
+    """Cold open/close retires full blocks into the cache; an identical
+    prompt then shares the same PHYSICAL blocks and reports the resident
+    prefix; the partial tail block is never cached."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=17, block_size=BS, dtype=jnp.float32,
+                      prefix_cache=True)
+    ids = _tokens(0, 40)                             # 2 full blocks + 8 tail
+    seq = kv.open_sequence(prompt_tokens=40, total_tokens=48, token_ids=ids)
+    assert seq.cached_tokens == 0 and kv.prefix_hits == 0
+    first_blocks = list(seq.blocks)
+    seq.length = 40
+    kv.close_sequence(seq, token_ids=ids)
+    assert kv.allocator.n_cached == 2                # full blocks retained
+    assert kv.allocator.n_free == 16 - 2             # tail freed
+
+    seq2 = kv.open_sequence(prompt_tokens=40, total_tokens=48, token_ids=ids)
+    assert seq2.cached_tokens == 2 * BS
+    assert seq2.blocks[:2] == first_blocks[:2]       # same physical blocks
+    assert seq2.blocks[2] not in kv._hash_of_block   # tail: fresh, uncached
+    assert kv.prefix_hits == 1 and kv.prefix_tokens_reused == 2 * BS
+    seq2.length = 40
+    kv.close_sequence(seq2, token_ids=ids)
+    kv.assert_drained()
+
+
+def test_hit_stops_at_first_divergent_block(smoke_model):
+    """The chain hash is prefix-dependent: a prompt diverging inside block
+    i reuses exactly the blocks before i, even if later windows match."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=17, block_size=BS, dtype=jnp.float32,
+                      prefix_cache=True)
+    ids = _tokens(1, 3 * BS + 5)
+    seq = kv.open_sequence(prompt_tokens=len(ids), total_tokens=len(ids) + 8,
+                           token_ids=ids)
+    seq.length = len(ids)
+    kv.close_sequence(seq, token_ids=ids)
+
+    fork = ids.copy()
+    fork[BS + 3] += 1                                # diverge inside block 1
+    seq2 = kv.open_sequence(prompt_tokens=len(fork),
+                            total_tokens=len(fork) + 8, token_ids=fork)
+    assert seq2.cached_tokens == BS                  # block 0 only
+    seq2.length = len(fork)
+    kv.close_sequence(seq2, token_ids=fork)
+    kv.assert_drained()
+
+
+def test_full_prompt_hit_copies_on_write(smoke_model):
+    """A hit covering the WHOLE prompt must not hand the last cached block
+    to the new sequence for its logits re-run: the block is duplicated
+    (CoW) with identical pool contents, the original stays registered and
+    unwritten, and the resident prefix is prompt-1 tokens."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=17, block_size=BS, dtype=jnp.float32,
+                      prefix_cache=True)
+    ids = _tokens(2, 2 * BS)                         # exact block multiple
+    seq = kv.open_sequence(prompt_tokens=2 * BS, total_tokens=2 * BS + 8,
+                           token_ids=ids)
+    seq.length = 2 * BS
+    # simulate prefill having written distinctive KV into the pool
+    marker = jnp.arange(kv.pool["k"].size, dtype=jnp.float32
+                        ).reshape(kv.pool["k"].shape) / 1000.
+    kv.pool = {"k": marker, "v": -marker}
+    orig = list(seq.blocks)
+    kv.close_sequence(seq, token_ids=ids)
+
+    seq2 = kv.open_sequence(prompt_tokens=2 * BS, total_tokens=2 * BS + 8,
+                            token_ids=ids)
+    assert seq2.cached_tokens == 2 * BS - 1          # one token to re-run
+    assert kv.cow_copies == 1
+    assert seq2.blocks[0] == orig[0]                 # first block shared
+    copy = seq2.blocks[1]
+    assert copy != orig[1]                           # last block duplicated
+    for key in ("k", "v"):                           # contents bit-identical
+        np.testing.assert_array_equal(np.asarray(kv.pool[key][:, copy]),
+                                      np.asarray(kv.pool[key][:, orig[1]]))
+    assert kv.allocator.refcount(orig[1]) == 0       # original: cached, idle
+    assert kv.allocator.refcount(copy) == 1          # copy: private
+    seq2.length = 2 * BS
+    kv.close_sequence(seq2, token_ids=ids)
+    kv.assert_drained()
+
+
+def test_shared_block_never_written_by_two_owners(smoke_model):
+    """Immutability property: for any admitted sequence, every position it
+    may still write (cached_tokens .. total) maps to a PRIVATE block —
+    sweep prompt lengths across block-boundary cases, with the cache
+    pre-seeded so hits of every depth occur."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=33, block_size=BS, dtype=jnp.float32,
+                      prefix_cache=True)
+    base = _tokens(3, 4 * BS)
+    seed = kv.open_sequence(prompt_tokens=len(base),
+                            total_tokens=len(base) + 4, token_ids=base)
+    seed.length = len(base)
+    kv.close_sequence(seq=seed, token_ids=base)
+
+    for S in (BS - 1, BS, BS + 1, 2 * BS, 3 * BS - 1, 3 * BS, 4 * BS):
+        ids = base[:S]
+        total = S + 8
+        seq = kv.open_sequence(prompt_tokens=S, total_tokens=total,
+                               token_ids=ids)
+        shared = set(seq.blocks[:seq.n_shared])
+        kv.grow_to(seq, total)                       # cover every write
+        for p in range(seq.cached_tokens, total):
+            owner = seq.table[p // BS]
+            assert owner not in shared, (S, p)
+            assert kv.allocator.refcount(int(owner)) == 1, (S, p)
+        seq.length = S
+        kv.close_sequence(seq, token_ids=ids)
+    kv.assert_drained()
+
+
+def test_concurrent_identical_prompts_dedup_on_close(smoke_model):
+    """Two live sequences with the same prompt admitted before either
+    closes: neither hits (registration happens at close), and closing both
+    registers the content ONCE — the duplicate's blocks free normally."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=17, block_size=BS, dtype=jnp.float32,
+                      prefix_cache=True)
+    ids = _tokens(4, 2 * BS + 4)
+    seqs = [kv.open_sequence(prompt_tokens=len(ids),
+                             total_tokens=len(ids) + 4, token_ids=ids)
+            for _ in range(2)]
+    assert all(s.cached_tokens == 0 for s in seqs)
+    for s in seqs:
+        s.length = len(ids)
+        kv.close_sequence(s, token_ids=ids)
+    assert kv.allocator.n_cached == 2                # one copy, not two
+    kv.assert_drained()
+
+
+# ----------------------------------------------------------- eviction --
+
+def test_eviction_is_lru_and_restores_capacity(smoke_model):
+    """Allocation pressure reclaims refcount-0 cached blocks least recently
+    used first: the oldest content stops hitting, the freshest still hits,
+    and a full-pool allocation succeeds despite retention."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=9, block_size=BS, dtype=jnp.float32,
+                      prefix_cache=True)                     # 8 usable
+    streams = [_tokens(10 + i, 2 * BS) for i in range(3)]
+    for ids in streams:                              # retire 3x2 blocks
+        seq = kv.open_sequence(prompt_tokens=2 * BS,
+                               total_tokens=2 * BS, token_ids=ids)
+        seq.length = 2 * BS
+        kv.close_sequence(seq, token_ids=ids)
+    assert kv.allocator.n_cached == 6 and kv.allocator.n_free == 2
+
+    # admitting 4 blocks must evict the two LRU blocks (stream 0)
+    big = _tokens(99, 4 * BS - 4)
+    seq = kv.open_sequence(prompt_tokens=len(big), total_tokens=len(big),
+                           token_ids=big)
+    assert kv.evictions == 2
+    assert kv.allocator.n_cached == 4
+    seq.length = len(big)
+    kv.close_sequence(seq, token_ids=big)
+
+    # stream 0 was evicted -> cold; stream 2 (freshest) still hits.
+    # opening stream 2 FIRST also pins its blocks against the eviction
+    # that admitting stream 0 cold will trigger.
+    s2 = kv.open_sequence(prompt_tokens=2 * BS, total_tokens=2 * BS,
+                          token_ids=streams[2])
+    assert s2.cached_tokens == 2 * BS - 1            # full-prompt CoW hit
+    s0 = kv.open_sequence(prompt_tokens=2 * BS, total_tokens=2 * BS,
+                          token_ids=streams[0])
+    assert s0.cached_tokens == 0                     # LRU-evicted: cold
+    for s, ids in ((s2, streams[2]), (s0, streams[0])):
+        s.length = 2 * BS
+        kv.close_sequence(s, token_ids=ids)
+    kv.assert_drained()
+
+
+def test_out_of_blocks_only_after_cache_drained(smoke_model):
+    """OutOfBlocks fires only once free list AND evictable cache are
+    exhausted; admission gating counts cached blocks as capacity."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=5, block_size=BS, dtype=jnp.float32,
+                      prefix_cache=True)                     # 4 usable
+    ids = _tokens(5, 2 * BS)
+    seq = kv.open_sequence(prompt_tokens=2 * BS, total_tokens=2 * BS,
+                           token_ids=ids)
+    seq.length = 2 * BS
+    kv.close_sequence(seq, token_ids=ids)
+    assert kv.allocator.n_free == 2 and kv.allocator.n_cached == 2
+    assert kv.can_admit(4 * BS)                      # cached counts
+    other = _tokens(6, 4 * BS)
+    seq = kv.open_sequence(prompt_tokens=4 * BS, total_tokens=4 * BS,
+                           token_ids=other)
+    assert kv.evictions == 2                         # cache gave way
+    with pytest.raises(OutOfBlocks):
+        kv.open_sequence(prompt_tokens=BS, total_tokens=BS)
+    seq.length = 4 * BS
+    kv.close_sequence(seq, token_ids=other)
+    kv.assert_drained()
+
+
+def test_truncate_refuses_rollback_into_shared_prefix(smoke_model):
+    """Spec-decoding rollback can never free a shared cached block: rolling
+    back below the resident prefix raises."""
+    cfg, _, _ = smoke_model
+    kv = PagedKVCache(cfg, num_blocks=9, block_size=BS, dtype=jnp.float32,
+                      prefix_cache=True)
+    ids = _tokens(7, 2 * BS + 4)
+    seq = kv.open_sequence(prompt_tokens=len(ids), total_tokens=len(ids) + 8,
+                           token_ids=ids)
+    seq.length = len(ids)
+    kv.close_sequence(seq, token_ids=ids)
+    seq = kv.open_sequence(prompt_tokens=len(ids), total_tokens=len(ids) + 8,
+                           token_ids=ids)
+    assert seq.cached_tokens == 2 * BS
+    with pytest.raises(ValueError, match="shared cached prefix"):
+        kv.truncate_to(seq, BS)
+    seq.length = len(ids)
+    assert kv.truncate_to(seq, len(ids)) == 0        # at the prompt: fine
+    kv.close_sequence(seq, token_ids=ids)
+    kv.assert_drained()
+
+
+# ------------------------------------------------------- end to end --
+
+@pytest.mark.tier1
+def test_batcher_prefix_cache_exact_and_fewer_dispatches(smoke_model):
+    """The serving property: a shared-system-prompt wave after a warm-up
+    request produces bit-identical greedy outputs to the cold arm with
+    strictly fewer prefill dispatches and fresh-block allocations, and the
+    pool still drains (retention excluded)."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(8)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 3 * BS).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, t).astype(np.int32)
+             for t in (5, 11, 0, BS)]                # 0 => CoW admission
+
+    def waves():
+        w1 = [Request(rid=0, prompt=np.concatenate([sys_prompt, tails[0]]),
+                      max_new_tokens=4)]
+        w2 = [Request(rid=i + 1,
+                      prompt=np.concatenate([sys_prompt, tails[i]]),
+                      max_new_tokens=4) for i in range(len(tails))]
+        return w1, w2
+
+    outputs, stats, allocs = {}, {}, {}
+    for prefix in (False, True):
+        pb = PagedBatcher(cfg, params, num_blocks=33, block_size=BS,
+                          decode_width=2, buckets=(32, 64),
+                          cache_dtype=jnp.float32, prefix_cache=prefix)
+        w1, w2 = waves()
+        pb.run(w1)
+        pb.run(w2)
+        assert all(r.done for r in w1 + w2)
+        pb.kv.assert_drained()
+        outputs[prefix] = [r.output for r in w1 + w2]
+        stats[prefix] = pb.stats()
+        allocs[prefix] = pb.kv.allocator.total_allocs
+    assert outputs[True] == outputs[False]
+    ref = _ref_generate(model, params,
+                        np.concatenate([sys_prompt, tails[1]]), 4)
+    assert outputs[True][2] == ref                   # and both match dense
+    assert stats[True]["prefill_dispatches"] < \
+        stats[False]["prefill_dispatches"]
+    assert allocs[True] < allocs[False]
+    assert stats[True]["prefix_hits"] > 0
+    assert stats[True]["cow_copies"] >= 1            # the len-0 tail
+    assert stats[False]["prefix_hits"] == 0
+
+
+def test_batcher_multi_turn_reuses_generated_blocks(smoke_model):
+    """Conversation pattern: turn 2's prompt extends turn 1's prompt +
+    REPLY, so the cache must hit on blocks containing generated-token KV
+    (the close-time hash runs over the written stream, not the prompt)."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(12)
+    turn1 = rng.integers(0, cfg.vocab_size, 2 * BS + 3).astype(np.int32)
+    n1 = 6
+    pb = PagedBatcher(cfg, params, num_blocks=33, block_size=BS,
+                      decode_width=2, buckets=(32, 64),
+                      cache_dtype=jnp.float32, prefix_cache=True)
+    r1 = Request(rid=0, prompt=turn1, max_new_tokens=n1)
+    pb.run([r1])
+    # turn 2: history = turn1 + the model's reply + new user tokens
+    history = np.concatenate([turn1, np.asarray(r1.output, np.int32),
+                              rng.integers(0, cfg.vocab_size, 5
+                                           ).astype(np.int32)])
+    r2 = Request(rid=1, prompt=history, max_new_tokens=4)
+    pb.run([r2])
+    s = pb.stats()
+    assert s["prefix_hits"] == 1
+    # the written stream of turn 1 covers 2*BS+3+n1-1 tokens -> its first
+    # (2*BS+3+n1-1)//BS blocks are cached, INCLUDING one holding reply KV
+    assert s["prefix_tokens_reused"] == ((len(turn1) + n1 - 1) // BS) * BS
+    assert r2.output == _ref_generate(model, params, history, 4)
+    pb.kv.assert_drained()

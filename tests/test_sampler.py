@@ -36,6 +36,19 @@ def test_low_temperature_converges_to_greedy():
     assert (t == jnp.argmax(logits, -1)).all()
 
 
+def test_filter_logits_temperature_zero_is_identity():
+    """Regression: the default SamplerConfig has temperature 0 (greedy); a
+    direct filter_logits call used to divide by it, turning every logit
+    into NaN/inf. Scaling must only apply when temperature > 0."""
+    logits = _logits(41)
+    out = filter_logits(logits, SamplerConfig())
+    assert jnp.isfinite(out).all()
+    assert (out == logits).all()
+    # top-k/top-p still apply at temperature 0
+    out = filter_logits(logits, SamplerConfig(top_k=3))
+    assert (jnp.isfinite(out).sum(-1) == 3).all()
+
+
 # ------------------------------------------------------------------- top-k --
 
 @pytest.mark.parametrize("k", [1, 3, 7, 20, 64])
@@ -48,6 +61,26 @@ def test_topk_mask_keeps_exactly_topk(k):
     top = jnp.argsort(logits, -1)[:, -k:]
     for b in range(logits.shape[0]):
         assert set(np.where(np.asarray(finite[b]))[0]) == set(np.asarray(top[b]))
+
+
+@pytest.mark.parametrize("k", [64, 65, 1000])
+def test_topk_at_or_above_vocab_keeps_everything(k):
+    """Regression: top_k >= V used to index ``sorted[:, -top_k]`` out of
+    range; clamped to the vocab it keeps every token (boundary k == V, and
+    any k > V)."""
+    logits = _logits(43)                     # V = 64
+    out = filter_logits(logits, SamplerConfig(temperature=1.0, top_k=k))
+    assert jnp.isfinite(out).all()
+    assert (out == logits).all()
+
+
+def test_topk_one_boundary_keeps_only_argmax():
+    logits = _logits(47)
+    out = filter_logits(logits, SamplerConfig(temperature=1.0, top_k=1))
+    finite = jnp.isfinite(out)
+    assert (finite.sum(-1) == 1).all()
+    assert (jnp.argmax(jnp.where(finite, out, -jnp.inf), -1)
+            == jnp.argmax(logits, -1)).all()
 
 
 def test_topk_one_is_greedy():

@@ -13,6 +13,11 @@ leaks, ``PagedKVCache.assert_drained``).
 Prompt lengths are drawn from a fixed palette so the arms share a bounded
 set of compiled chunk graphs (the bucketing contract); arrival order and
 budgets are fully random per seed.
+
+A separate prefix-cache arm replays random shared/unshared prompt mixes
+(two system prompts, random tails, a second wave over retired blocks) on
+both sync modes: warm-path outputs must stay token-identical to the
+sequential reference and cache retention must not leak.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -75,6 +80,65 @@ def _arms(cfg, params, n, max_len):
                                                  spec=SpecConfig(k=2),
                                                  **paged),
     }
+
+
+def _shared_prefix_workload(cfg, seed, n=6):
+    """Random shared/unshared prompt mix for the prefix-cache arm: two
+    'system prompts' (block-aligned and not), each request independently
+    picks one of them or none, then appends a random tail — so hits of
+    every depth, full-prompt CoW admissions (empty tails), and cold misses
+    all interleave under random arrival order."""
+    rng = np.random.default_rng(1000 + seed)
+    systems = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (3 * BS, 2 * BS + 5)]
+    prompts = []
+    for _ in range(n):
+        head = systems[int(rng.integers(3)) % 2] if rng.random() < 0.75 \
+            else np.zeros((0,), np.int32)
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.choice((0, 3, 9, BS, 33)))
+                            ).astype(np.int32)
+        prompt = np.concatenate([head, tail])
+        if len(prompt) == 0:
+            prompt = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+        prompts.append(prompt)
+    budgets = [int(b) for b in rng.integers(1, 8, size=n)]
+    order = list(rng.permutation(n))
+    return prompts, budgets, order
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("seed", [0, pytest.param(1, marks=pytest.mark.slow),
+                                  pytest.param(2, marks=pytest.mark.slow)])
+def test_prefix_cache_arms_token_identical_and_leak_free(smoke_model, seed):
+    """Prefix-cache fuzz arm: under random shared/unshared prompt mixes —
+    submitted twice, so the second pass hits blocks retired by the first —
+    the host- and device-sync prefix-cache arms stay token-identical to
+    the sequential reference and the pool drains (cache retention is not
+    a leak)."""
+    cfg, model, params = smoke_model
+    prompts, budgets, order = _shared_prefix_workload(cfg, seed)
+    max_len = 3 * BS + 33 + 8 + 1
+    nb = 1 + 2 * len(prompts) * -(-max_len // BS)
+    refs = [_reference(model, params, p, m)
+            for p, m in zip(prompts, budgets)]
+    for sync, kw in (("host", {}), ("device", {"window": 3})):
+        batcher = PagedBatcher(cfg, params, sync=sync, num_blocks=nb,
+                               block_size=BS, prefix_cache=True,
+                               max_blocks_per_seq=-(-max_len // BS),
+                               decode_width=3, buckets=(32, 64),
+                               cache_dtype=jnp.float32, **kw)
+        for wave in range(2):                # wave 2 replays: warm hits
+            reqs = [Request(rid=i, prompt=prompts[i],
+                            max_new_tokens=budgets[i]) for i in order]
+            batcher.run(reqs)
+            for r in reqs:
+                assert r.done, (sync, wave, seed, r.rid)
+                assert r.output == refs[r.rid], (sync, wave, seed, r.rid)
+        batcher.kv.assert_drained()
+        st = batcher.stats()
+        assert st["prefix_hits"] > 0, (sync, seed)
+        assert st["prefix_tokens_reused"] > 0, (sync, seed)
 
 
 @pytest.mark.tier1
