@@ -1,0 +1,187 @@
+"""Open-loop serving latency: TTFT / TPOT / queue-delay percentiles under
+seeded arrival streams, across every serving arm.
+
+Everything before this benchmark measured dispatch counts in a closed
+loop; this one measures what a USER sees. A deterministic virtual-time
+harness (``FakeClock`` + a fixed per-tick cost) drives the async ingress
+(serving/ingress.py) over seeded Poisson and bursty arrivals, so the
+latency percentiles are bitwise-reproducible across runs — the same
+numbers CI would get, with zero real sleeps.
+
+Arms (all greedy, all token-identical to the sequential reference, all
+draining the paged pool):
+
+  * ``closed``       — every request at t=0 (the old regime, for contrast);
+  * ``host``         — open-loop Poisson over per-token host-synced decode;
+  * ``host_burst``   — the same arm under bursty on-off arrivals (same
+                       long-run rate; the tail is the story);
+  * ``device``       — fused-window decode (fewer host syncs per token);
+  * ``mixed``        — stage-parallel prefill⊕decode fusion;
+  * ``spec``         — speculative decoding (k=2 self-draft);
+  * ``prefix``       — shared-system-prompt traffic with the prefix cache;
+  * ``bp_preempt``   — a deliberately undersized pool with a priority mix:
+                       watermark backpressure defers admissions and blocked
+                       high-priority arrivals PREEMPT low-priority lanes
+                       (KV retires through the prefix cache; resumes
+                       re-prefill only the uncached suffix). Asserts
+                       preemptions actually happened AND outputs stayed
+                       token-identical.
+
+Also asserts the ``host`` arm's full report is bitwise-identical when
+re-run — the determinism contract the tier-1 harness pins.
+
+Rows: ``open_loop.<arm>.<metric>`` (us). ``BENCH_open_loop.json`` carries
+the full percentile reports.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving.ingress import (AsyncServer, burst_arrivals,
+                                   open_loop_workload, poisson_arrivals)
+from repro.serving.scheduler import PagedBatcher
+from repro.serving.spec import SpecConfig
+from repro.serving.telemetry import FakeClock
+from repro.serving.sampler import SamplerConfig
+
+BS = 16                    # pool block size
+N_REQ = 6
+RATE = 150.0               # req/s of virtual time (1 tick = 1 ms)
+STEP_TIME_S = 1e-3
+SLO_MS = 120.0
+SYS_PROMPT_LEN = 32        # two full shared blocks (prefix arm)
+TAIL_LENS = (7, 20, 0, 13, 33, 16)
+BUDGETS = (6, 5, 7, 4, 6, 5)
+
+
+def _reference(model, params, prompt, n):
+    cache = model.init_cache(batch=1, max_len=256, dtype=jnp.float32)
+    logits, cache = model.prefill(params, jnp.asarray(prompt)[None], cache)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n - 1):
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def _prompts(cfg, shared: bool):
+    rng = np.random.default_rng(3)
+    sys_prompt = rng.integers(0, cfg.vocab_size,
+                              SYS_PROMPT_LEN).astype(np.int32)
+    out = []
+    for t in TAIL_LENS:
+        tail = rng.integers(0, cfg.vocab_size, t).astype(np.int32)
+        out.append(np.concatenate([sys_prompt, tail]) if shared
+                   else np.concatenate([
+                       rng.integers(0, cfg.vocab_size,
+                                    SYS_PROMPT_LEN).astype(np.int32), tail]))
+    return out
+
+
+def _run_arm(cfg, params, refs, prompts, times, *, priorities=None,
+             num_blocks=None, watermark=0, **batcher_kw):
+    max_len = SYS_PROMPT_LEN + max(TAIL_LENS) + max(BUDGETS) + 1
+    nb = num_blocks or (1 + N_REQ * -(-max_len // BS))
+    pb = PagedBatcher(cfg, params, num_blocks=nb, block_size=BS,
+                      max_blocks_per_seq=-(-max_len // BS), decode_width=3,
+                      buckets=(32, 64), cache_dtype=jnp.float32,
+                      sampler=SamplerConfig(), **batcher_kw)
+    server = AsyncServer(pb, clock=FakeClock(), step_time_s=STEP_TIME_S,
+                         admit_watermark=watermark)
+    handles = server.run_sync(open_loop_workload(
+        prompts, BUDGETS, times, priorities))
+    for h, ref in zip(handles, refs):
+        assert h.done and h.terminal_events == 1, h.rid
+        assert h.tokens == ref, (
+            f"rid {h.rid}: open-loop output diverged from the sequential "
+            f"reference ({h.tokens} vs {ref})")
+    pb.kv.assert_drained()
+    return server
+
+
+def _record(arm: str, server: AsyncServer, metrics: dict) -> None:
+    rep = server.report(slo_ms=SLO_MS)
+    st = server.stats()
+    for m in ("ttft_ms", "tpot_ms", "queue_delay_ms"):
+        for q in ("p50", "p95", "p99"):
+            emit(f"open_loop.{arm}.{m.removesuffix('_ms')}_{q}",
+                 rep[m][q] * 1e3)       # ms -> us rows
+    emit(f"open_loop.{arm}.goodput", rep["goodput_req_s"] * 1e6,
+         f"attainment={rep['slo_attainment']:.2f};"
+         f"preempt={st['preemptions']};defer={st['ingress_deferrals']};"
+         f"ticks={st['ingress_ticks']}")
+    metrics[arm] = {
+        "ttft_ms": rep["ttft_ms"], "tpot_ms": rep["tpot_ms"],
+        "queue_delay_ms": rep["queue_delay_ms"],
+        "goodput_req_s": rep["goodput_req_s"],
+        "slo_attainment": rep["slo_attainment"],
+        "makespan_s": rep["makespan_s"],
+        "preemptions": st["preemptions"],
+        "deferrals": st["ingress_deferrals"],
+    }
+
+
+def main() -> None:
+    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
+                                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    prompts = _prompts(cfg, shared=False)
+    shared_prompts = _prompts(cfg, shared=True)
+    refs = [_reference(model, params, p, m)
+            for p, m in zip(prompts, BUDGETS)]
+    shared_refs = [_reference(model, params, p, m)
+                   for p, m in zip(shared_prompts, BUDGETS)]
+
+    poisson = poisson_arrivals(RATE, N_REQ, seed=0)
+    burst = burst_arrivals(RATE, N_REQ, seed=0)
+    closed = np.zeros(N_REQ)
+    metrics: dict = {}
+
+    _record("closed", _run_arm(cfg, params, refs, prompts, closed), metrics)
+    host = _run_arm(cfg, params, refs, prompts, poisson)
+    _record("host", host, metrics)
+    _record("host_burst", _run_arm(cfg, params, refs, prompts, burst),
+            metrics)
+    _record("device", _run_arm(cfg, params, refs, prompts, poisson,
+                               sync="device", window=3), metrics)
+    _record("mixed", _run_arm(cfg, params, refs, prompts, poisson,
+                              sync="device", window=3, mixed_batch=True),
+            metrics)
+    _record("spec", _run_arm(cfg, params, refs, prompts, poisson,
+                             spec=SpecConfig(k=2)), metrics)
+    _record("prefix", _run_arm(cfg, params, shared_refs, shared_prompts,
+                               poisson, prefix_cache=True), metrics)
+
+    # backpressure + preemption: pool sized so the first two low-priority
+    # admissions leave no headroom for the high-priority arrivals (which
+    # land in one tight burst right behind them) — the watermark defers
+    # them and they preempt; prefix cache makes the resumes suffix-only
+    prios = [0, 0, 1, 1, 0, 1]
+    bp = _run_arm(cfg, params, shared_refs, shared_prompts,
+                  burst_arrivals(600.0, N_REQ, seed=2, burst_size=N_REQ),
+                  priorities=prios, num_blocks=9, watermark=1,
+                  prefix_cache=True)
+    _record("bp_preempt", bp, metrics)
+    assert bp.preemptions > 0, "backpressure arm exercised no preemption"
+    assert bp.deferrals > 0, "backpressure arm exercised no deferral"
+    assert bp.stats()["prefix_hits"] > 0, "resumes never hit the cache"
+
+    # determinism: same seeds, same clock, same bits — the whole harness's
+    # reason to exist as a *measuring* instrument
+    rerun = _run_arm(cfg, params, refs, prompts, poisson)
+    assert rerun.report(slo_ms=SLO_MS) == host.report(slo_ms=SLO_MS), (
+        "open-loop report is not bitwise-reproducible across identical runs")
+    metrics["bitwise_reproducible"] = True
+
+    emit_json("open_loop", metrics)
+
+
+if __name__ == "__main__":
+    main()

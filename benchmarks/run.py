@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.bench_mixed_batch",       # stage-parallel prefill⊕decode fusion
     "benchmarks.bench_spec",              # speculative decoding vs plain decode
     "benchmarks.bench_prefix",            # prefix caching vs cold prefill
+    "benchmarks.bench_open_loop",         # open-loop TTFT/TPOT percentiles
     "benchmarks.roofline_report",         # §Roofline
 ]
 

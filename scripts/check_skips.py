@@ -24,10 +24,11 @@ ALLOWED_SKIPS: dict[str, str] = {}
 # every tests/test_*.py module must show up in the tier-1 report
 EXPECTED_MODULES = (
     "test_attention", "test_core", "test_distributed", "test_fused_decode",
-    "test_kernel_conformance", "test_kernels", "test_mixed_batch",
-    "test_models", "test_paged_cache", "test_prefix_cache",
-    "test_sampler", "test_scheduler_fuzz", "test_serving",
-    "test_solver_properties", "test_spec", "test_system", "test_training",
+    "test_ingress", "test_kernel_conformance", "test_kernels",
+    "test_mixed_batch", "test_models", "test_paged_cache",
+    "test_prefix_cache", "test_sampler", "test_scheduler_fuzz",
+    "test_serving", "test_solver_properties", "test_spec",
+    "test_system", "test_telemetry", "test_training",
 )
 
 

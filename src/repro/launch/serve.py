@@ -31,11 +31,26 @@ Paged mode fuses the engine into the serving path
                     workload; --decode-width < --requests staggers closes
                     so later admissions actually hit)
   --stats           print the scheduler's unified stats() counter dict
+
+Batched serving always runs through the async ingress
+(serving/ingress.py): every request is timestamped against the wall clock
+(serving/telemetry.py) and the run reports TTFT / TPOT / queue-delay
+p50/p95/p99 plus goodput — in CLOSED-loop mode (default: all requests
+arrive at t=0) as well as open loop:
+  --open-loop       requests arrive on a seeded schedule instead of all
+                    at once — the latency a real user sees under load
+  --arrival P       arrival process: poisson (memoryless) or burst
+                    (on-off at the same long-run rate)
+  --rate R          mean arrival rate, requests/second
+  --slo-ms MS       TTFT SLO: goodput counts only requests under it
+  --priority-mix F  fraction of requests submitted LOW priority; blocked
+                    high-priority arrivals may preempt their lanes (paged)
+  --watermark N     admission backpressure: defer while admitting would
+                    leave fewer than N free+cached blocks (paged)
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
@@ -96,6 +111,30 @@ def main(argv=None):
                          "prompt prefix (the prefix-cache workload shape)")
     ap.add_argument("--stats", action="store_true",
                     help="print the scheduler's stats() counter dict")
+    ap.add_argument("--open-loop", action="store_true", dest="open_loop",
+                    help="open-loop serving: requests arrive on a seeded "
+                         "schedule (--arrival/--rate) instead of all at t=0")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "burst"],
+                    help="arrival process (--open-loop)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="mean arrival rate, requests/s (--open-loop)")
+    ap.add_argument("--arrival-seed", type=int, default=0,
+                    dest="arrival_seed",
+                    help="seed for the arrival schedule (--open-loop)")
+    ap.add_argument("--slo-ms", type=float, default=None, dest="slo_ms",
+                    metavar="MS",
+                    help="TTFT SLO in ms: goodput counts only requests "
+                         "whose first token lands under it")
+    ap.add_argument("--priority-mix", type=float, default=0.0,
+                    dest="priority_mix", metavar="F",
+                    help="fraction of requests submitted LOW priority "
+                         "(preemptible by blocked high-priority arrivals; "
+                         "paged mode)")
+    ap.add_argument("--watermark", type=int, default=0,
+                    help="admission backpressure: defer admission while it "
+                         "would leave fewer than N free+cached blocks "
+                         "(paged mode)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=300)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -113,6 +152,14 @@ def main(argv=None):
         ap.error("--spec-draft applies to --spec-k")
     if args.spec_k is not None and args.mixed_batch:
         ap.error("--spec-k and --mixed-batch are mutually exclusive")
+    if args.open_loop and not args.batched:
+        ap.error("--open-loop applies to the batched servers: add --batched")
+    if (args.priority_mix or args.watermark) \
+            and not (args.batched and args.paged):
+        ap.error("--priority-mix / --watermark apply to the paged batcher: "
+                 "add --batched --paged")
+    if not 0.0 <= args.priority_mix <= 1.0:
+        ap.error("--priority-mix must be in [0, 1]")
 
     import jax
     from repro.configs import get_config, get_smoke_config
@@ -120,8 +167,7 @@ def main(argv=None):
     rng = np.random.default_rng(0)
 
     if args.batched:
-        from repro.serving.scheduler import (ContinuousBatcher, PagedBatcher,
-                                             Request)
+        from repro.serving.scheduler import ContinuousBatcher, PagedBatcher
         max_len = args.prompt_len + args.new_tokens + 8
         if args.paged:
             spec = None
@@ -165,22 +211,52 @@ def main(argv=None):
                      "per-request tail below --prompt-len")
         sys_prompt = rng.integers(0, cfg.vocab_size,
                                   args.shared_prefix).astype(np.int32)
-        reqs = [Request(rid=i,
-                        prompt=np.concatenate([
-                            sys_prompt,
-                            rng.integers(0, cfg.vocab_size,
-                                         rng.integers(8, args.prompt_len
-                                                      - args.shared_prefix)
-                                         ).astype(np.int32)]),
-                        max_new_tokens=args.new_tokens)
-                for i in range(args.requests)]
-        t0 = time.perf_counter()
-        cb.run(reqs)
-        dt = time.perf_counter() - t0
-        tok = sum(len(r.output) for r in reqs)
-        print(f"{label}: {args.requests} reqs, {tok} tokens in {dt:.2f}s "
-              f"({tok / dt:.1f} tok/s, peak concurrency "
+        prompts = [np.concatenate([
+            sys_prompt,
+            rng.integers(0, cfg.vocab_size,
+                         rng.integers(8, args.prompt_len
+                                      - args.shared_prefix)
+                         ).astype(np.int32)])
+            for _ in range(args.requests)]
+        # all serving timing flows through the injectable clock: the same
+        # Telemetry machinery the deterministic tests pin, on a wall clock
+        from repro.serving.ingress import AsyncServer, arrival_times, \
+            open_loop_workload
+        from repro.serving.telemetry import MonotonicClock
+        clock = MonotonicClock()
+        server = AsyncServer(cb, clock=clock,
+                             admit_watermark=args.watermark)
+        prios = [0 if rng.random() < args.priority_mix else 1
+                 for _ in range(args.requests)]
+        if args.open_loop:
+            t_arr = arrival_times(args.arrival, args.rate, args.requests,
+                                  args.arrival_seed)
+        else:
+            t_arr = np.zeros(args.requests)    # closed loop: all at t=0
+        t0 = clock.now()
+        handles = server.run_sync(open_loop_workload(
+            prompts, [args.new_tokens] * args.requests, t0 + t_arr, prios))
+        dt = clock.now() - t0
+        tok = sum(len(h.tokens) for h in handles)
+        loop = (f"open-loop {args.arrival}@{args.rate}/s" if args.open_loop
+                else "closed-loop")
+        print(f"{label}: {loop}, {args.requests} reqs, {tok} tokens in "
+              f"{dt:.2f}s ({tok / dt:.1f} tok/s, peak concurrency "
               f"{cb.peak_active})")
+        rep = server.report(slo_ms=args.slo_ms)
+        for m in ("ttft_ms", "tpot_ms", "queue_delay_ms"):
+            s = rep[m]
+            if s["n"]:
+                print(f"  {m.removesuffix('_ms')}: p50 {s['p50']:.1f} ms, "
+                      f"p95 {s['p95']:.1f} ms, p99 {s['p99']:.1f} ms "
+                      f"(n={s['n']})")
+        good = rep["goodput_req_s"]
+        print(f"  goodput: {good:.2f} req/s"
+              + (f" under TTFT SLO {args.slo_ms:.0f} ms "
+                 f"({100 * rep['slo_attainment']:.0f}% attainment)"
+                 if args.slo_ms is not None else " (no SLO given)")
+              + (f", {rep['preemptions']} preemptions"
+                 if rep["preemptions"] else ""))
         if args.paged:
             print(f"  decode: {cb.decode_dispatches} host dispatches for "
                   f"{cb.decode_steps} decoded tokens "
@@ -203,7 +279,7 @@ def main(argv=None):
                       f"{s['evictions']} evictions, "
                       f"{s['cow_copies']} CoW copies")
         if args.stats:
-            print(f"  stats: {cb.stats()}")
+            print(f"  stats: {server.stats()}")
         return
 
     from repro.core.engine import InferenceEngine

@@ -91,6 +91,20 @@ class Request:
     done: bool = False
 
 
+def _validate_submit(req: Request, live_rids) -> None:
+    """Shared submit guard: an empty prompt has no first token to sample
+    (prefill would dispatch a zero-length chunk) and a request id already
+    queued or in flight would make two streams indistinguishable — both
+    raise here instead of failing obscurely mid-schedule. Finished ids may
+    be reused (replay waves and preemption resumes depend on it)."""
+    if len(req.prompt) == 0:
+        raise ValueError(f"request {req.rid}: empty prompt — a request "
+                         "must carry at least one prompt token")
+    if req.rid in live_rids:
+        raise ValueError(f"request {req.rid}: duplicate id — a request "
+                         "with this id is already queued or in flight")
+
+
 class ContinuousBatcher:
     def __init__(self, cfg, params=None, *, max_batch: int = 4,
                  max_len: int = 512, buckets=(64, 128, 256),
@@ -123,8 +137,17 @@ class ContinuousBatcher:
                                       static_argnames=("chunk",),
                                       donate_argnums=(1,))
 
+    @property
+    def busy(self) -> bool:
+        """Work outstanding: queued requests or occupied slots (same
+        contract as ``PagedBatcher.busy`` — what external tick-drivers
+        loop on)."""
+        return bool(self.queue or any(s is not None for s in self.slots))
+
     # ------------------------------------------------------------ plumbing --
     def submit(self, req: Request):
+        _validate_submit(req, {r.rid for r in self.queue}
+                         | {s.rid for s in self.slots if s is not None})
         self.queue.append(req)
 
     def _admit(self):
@@ -388,6 +411,7 @@ class PagedBatcher:
         self.decode_steps = 0
         self.prefill_dispatches = 0      # standalone prefill-chunk dispatches
         self.fused_steps = 0             # prefill chunks fused into decode
+        self.preemptions = 0             # lanes evicted mid-flight (ingress)
         # speculative decoding counters (spec mode): the win is
         # verify_dispatches << decode_steps; acceptance_rate explains it
         self.spec_rounds = 0             # per-lane speculation rounds
@@ -457,6 +481,7 @@ class PagedBatcher:
             "decode_steps": self.decode_steps,
             "prefill_dispatches": self.prefill_dispatches,
             "fused_steps": self.fused_steps,
+            "preemptions": self.preemptions,
             "total_dispatches": self.total_dispatches,
         }
         s.update(self.kv.prefix_stats())
@@ -485,6 +510,11 @@ class PagedBatcher:
 
     # ------------------------------------------------------------ plumbing --
     def submit(self, req: Request):
+        live = {r.rid for r in self.queue}
+        live.update(lane.req.rid for lane in self.lanes if lane is not None)
+        if self._admitting is not None:
+            live.add(self._admitting.req.rid)
+        _validate_submit(req, live)
         self.queue.append(req)
 
     def _try_open(self, req: Request) -> Optional[SequenceBlocks]:
@@ -587,20 +617,47 @@ class PagedBatcher:
         self._place(adm.req, adm.seq,
                     int(sample(pre_logits[:, -1, :], k, self.sampler)[0]))
 
-    def _finish(self, lane: int):
+    def _close_lane(self, lane: int) -> _PagedLane:
+        """Return lane ``lane``'s pool references (shared by finish and
+        preemption): with the prefix cache on, full blocks of the WRITTEN
+        token stream retire under their chain hash — KV position p holds
+        the p-th token of prompt + output in every serving mode, and the
+        last sampled token's KV is never written, so slice to
+        ``seq.length``."""
         st = self.lanes[lane]
-        st.req.done = True
         ids = None
         if self.prefix_cache:
-            # the written token stream: KV position p holds the p-th token
-            # of prompt + output in every serving mode (the last sampled
-            # token's KV is never written, so slice to seq.length) — what
-            # close_sequence hashes to retire full blocks into the cache
             ids = np.concatenate([
                 np.asarray(st.req.prompt, np.int64),
                 np.asarray(st.req.output, np.int64)])[:st.seq.length]
         self.kv.close_sequence(st.seq, token_ids=ids)
         self.lanes[lane] = None
+        return st
+
+    def _finish(self, lane: int):
+        self._close_lane(lane).req.done = True
+
+    def preempt(self, lane: int) -> Request:
+        """Evict lane ``lane`` mid-flight, freeing its pool blocks for
+        higher-priority work, and return its (unfinished) request. With the
+        prefix cache on the evicted KV RETIRES instead of freeing, so a
+        resume that re-submits ``prompt + output`` with the remaining
+        budget hash-matches the retired blocks and re-prefills only the
+        uncached suffix (recompute-on-resume through PR 5's cache). Under
+        greedy decoding the resumed continuation is bit-identical to the
+        un-preempted stream: the resume prompt IS the stream so far, and
+        prefill logits at a position equal decode logits at that position.
+        The scheduler caller (serving/ingress.py) owns the re-queueing."""
+        st = self.lanes[lane]
+        if st is None:
+            raise ValueError(f"preempt of idle lane {lane}")
+        if st.budget <= 0:
+            raise ValueError(f"preempt of finishing lane {lane}: it frees "
+                             "itself on the next step")
+        self.preemptions += 1
+        if self.drafts is not None:
+            self.drafts.rollback(lane, 0)   # stale draft cache: cursor home
+        return self._close_lane(lane).req
 
     # ----------------------------------------------------------------- run --
     def step(self):

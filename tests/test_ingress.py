@@ -1,0 +1,288 @@
+"""Open-loop ingress tests: arrival-generator determinism, the streaming
+contract (incremental, in order, exactly one terminal event), watermark
+backpressure, priority preemption with recompute-on-resume, and stall
+detection — all under FakeClock, zero real sleeps."""
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.ingress import (AsyncServer, arrival_times,
+                                   burst_arrivals, open_loop_workload,
+                                   poisson_arrivals)
+from repro.serving.scheduler import ContinuousBatcher, PagedBatcher
+from repro.serving.telemetry import FakeClock, MonotonicClock
+
+BS = 16
+STEP = 1e-3                   # virtual seconds per scheduler tick
+
+
+# ------------------------------------------------------------- generators --
+
+@pytest.mark.tier1
+def test_poisson_arrivals_deterministic_and_monotone():
+    a = poisson_arrivals(10.0, 50, seed=3)
+    b = poisson_arrivals(10.0, 50, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) > 0) and a[0] > 0
+    assert not np.array_equal(a, poisson_arrivals(10.0, 50, seed=4))
+    # long-run rate: mean gap ~ 1/rate (law of large numbers, wide net)
+    gaps = np.diff(poisson_arrivals(10.0, 4000, seed=0))
+    assert abs(gaps.mean() - 0.1) < 0.01
+
+
+@pytest.mark.tier1
+def test_burst_arrivals_same_long_run_rate_but_clustered():
+    xs = burst_arrivals(10.0, 4000, seed=0, burst_size=4, duty=0.2)
+    assert np.all(np.diff(xs) > 0)
+    assert abs(np.diff(xs).mean() - 0.1) < 0.01     # same mean rate...
+    gaps = np.diff(xs)
+    # ...but bimodal: within-burst gaps are ~duty/rate, far below the mean
+    assert np.median(gaps) < 0.5 * gaps.mean()
+    np.testing.assert_array_equal(xs, burst_arrivals(10.0, 4000, seed=0,
+                                                     burst_size=4, duty=0.2))
+
+
+@pytest.mark.tier1
+def test_arrival_generator_validation_and_dispatch():
+    np.testing.assert_array_equal(arrival_times("poisson", 5.0, 8, seed=1),
+                                  poisson_arrivals(5.0, 8, seed=1))
+    np.testing.assert_array_equal(arrival_times("burst", 5.0, 8, seed=1),
+                                  burst_arrivals(5.0, 8, seed=1))
+    with pytest.raises(ValueError, match="unknown arrival"):
+        arrival_times("uniform", 5.0, 8)
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(0.0, 8)
+    with pytest.raises(ValueError, match="rate"):
+        burst_arrivals(-1.0, 8)
+    with pytest.raises(ValueError, match="duty"):
+        burst_arrivals(5.0, 8, duty=1.0)
+    with pytest.raises(ValueError, match="burst_size"):
+        burst_arrivals(5.0, 8, burst_size=0)
+
+
+# -------------------------------------------------------------- harnessing --
+
+def _ref(model, params, prompt, n):
+    cache = model.init_cache(batch=1, max_len=256, dtype=jnp.float32)
+    logits, cache = model.prefill(params, jnp.asarray(prompt)[None], cache)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n - 1):
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    return out
+
+
+def _paged(cfg, params, *, num_blocks, max_blocks=4, width=3, **kw):
+    from repro.serving.sampler import SamplerConfig
+    return PagedBatcher(cfg, params, num_blocks=num_blocks, block_size=BS,
+                        max_blocks_per_seq=max_blocks, decode_width=width,
+                        buckets=(32, 64), cache_dtype=jnp.float32,
+                        sampler=SamplerConfig(), **kw)
+
+
+# -------------------------------------------------------------- validation --
+
+@pytest.mark.tier1
+def test_submit_and_config_validation(smoke_model):
+    cfg, model, params = smoke_model
+    pb = _paged(cfg, params, num_blocks=9)
+    server = AsyncServer(pb, clock=FakeClock())
+    with pytest.raises(ValueError, match="non-empty"):
+        server.submit(np.zeros((0,), np.int32))
+    with pytest.raises(ValueError, match="non-empty"):
+        server.submit(np.zeros((2, 3), np.int32))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        server.submit([1, 2, 3], max_new_tokens=0)
+    server.submit([1, 2, 3], rid=7)
+    with pytest.raises(ValueError, match="duplicate"):
+        server.submit([4, 5], rid=7)
+
+    with pytest.raises(TypeError, match="unsupported batcher"):
+        AsyncServer(object())
+    with pytest.raises(ValueError, match="advanceable"):
+        AsyncServer(_paged(cfg, params, num_blocks=9),
+                    clock=MonotonicClock(), step_time_s=STEP)
+    cb = ContinuousBatcher(cfg, params, max_batch=2, max_len=64,
+                           buckets=(32, 64))
+    with pytest.raises(ValueError, match="paged"):
+        AsyncServer(cb, admit_watermark=2)
+
+
+# --------------------------------------------------------------- streaming --
+
+@pytest.mark.tier1
+def test_streaming_incremental_in_order_terminal_once(smoke_model):
+    """Tokens reach the async consumer AS they are produced — successive
+    tokens carry later virtual timestamps — in order, and the stream ends
+    with exactly one terminal event."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    n = 5
+    ref = _ref(model, params, prompt, n)
+    pb = _paged(cfg, params, num_blocks=9)
+    clock = FakeClock()
+    server = AsyncServer(pb, clock=clock, step_time_s=STEP)
+
+    async def drive():
+        handle = server.submit(prompt, max_new_tokens=n)
+        seen = []
+
+        async def consume():
+            async for tok in handle:
+                seen.append((tok, clock.now()))
+
+        consumer = asyncio.create_task(consume())
+        await server.run()
+        await consumer
+        return handle, seen
+
+    handle, seen = asyncio.run(drive())
+    assert [t for t, _ in seen] == ref == handle.tokens
+    stamps = [s for _, s in seen]
+    # incremental: the consumer observes each token IN the virtual tick
+    # that produced it (stamps equal the production-side telemetry stamps),
+    # spread across multiple ticks — NOT one batch at the end of the run
+    assert stamps == server.telemetry.traces[0].token_ts
+    assert all(b >= a for a, b in zip(stamps, stamps[1:]))
+    assert len(set(stamps)) >= 3
+    assert handle.done and handle.terminal_events == 1
+    pb.kv.assert_drained()
+
+    async def reiterate():        # a drained, finished stream just closes
+        return [tok async for tok in handle]
+
+    assert asyncio.run(reiterate()) == []
+
+
+@pytest.mark.tier1
+def test_stream_contract_violations_raise(smoke_model):
+    cfg, model, params = smoke_model
+    server = AsyncServer(_paged(cfg, params, num_blocks=9),
+                         clock=FakeClock())
+    h = server.submit([1, 2, 3], max_new_tokens=1)
+    h._put_token(5)
+    h._finish()
+    with pytest.raises(RuntimeError, match="after finish"):
+        h._put_token(6)
+    with pytest.raises(RuntimeError, match="finished twice"):
+        h._finish()
+
+
+@pytest.mark.tier1
+def test_open_loop_enqueue_stamped_at_scheduled_time(smoke_model):
+    """Arrivals are stamped at their SCHEDULED time even when the server
+    is mid-batch when they land — that lateness is queueing delay, and the
+    telemetry must see it."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (6, 9, 4)]
+    budgets = [3, 4, 3]
+    refs = [_ref(model, params, p, m) for p, m in zip(prompts, budgets)]
+    times = poisson_arrivals(400.0, 3, seed=2)
+    pb = _paged(cfg, params, num_blocks=13, width=2)
+    server = AsyncServer(pb, clock=FakeClock(), step_time_s=STEP)
+    handles = server.run_sync(open_loop_workload(prompts, budgets, times))
+    for h, ref in zip(handles, refs):
+        assert h.tokens == ref and h.terminal_events == 1
+    for rid, t in enumerate(times):
+        assert server.telemetry.traces[rid].enqueue_t == pytest.approx(t)
+        assert server.telemetry.traces[rid].queue_delay >= 0
+    pb.kv.assert_drained()
+
+
+@pytest.mark.tier1
+def test_dense_batcher_open_loop(smoke_model):
+    """The ingress is batcher-agnostic: the dense ContinuousBatcher serves
+    the same open-loop stream (no watermark/preemption, slot-gated only)."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (5, 8, 11)]
+    budgets = [3, 2, 4]
+    refs = [_ref(model, params, p, m) for p, m in zip(prompts, budgets)]
+    cb = ContinuousBatcher(cfg, params, max_batch=2, max_len=64,
+                           buckets=(32, 64))
+    server = AsyncServer(cb, clock=FakeClock(), step_time_s=STEP)
+    handles = server.run_sync(open_loop_workload(
+        prompts, budgets, poisson_arrivals(300.0, 3, seed=9)))
+    for h, ref in zip(handles, refs):
+        assert h.tokens == ref and h.terminal_events == 1
+    assert server.ticks > 0
+
+
+# ------------------------------------------------- backpressure/preemption --
+
+@pytest.mark.tier1
+def test_watermark_defers_admission_until_blocks_free(smoke_model):
+    """One usable block: the second request must wait for the first to
+    drain — deferral count rises, nobody is preempted (same priority), and
+    both outputs stay token-identical."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+               for _ in range(2)]
+    budgets = [4, 4]
+    refs = [_ref(model, params, p, m) for p, m in zip(prompts, budgets)]
+    pb = _paged(cfg, params, num_blocks=2, max_blocks=1, width=2)
+    server = AsyncServer(pb, clock=FakeClock(), step_time_s=STEP)
+    handles = server.run_sync(open_loop_workload(
+        prompts, budgets, [0.0, 0.0]))
+    for h, ref in zip(handles, refs):
+        assert h.tokens == ref
+    assert server.deferrals > 0
+    assert server.preemptions == 0
+    pb.kv.assert_drained()
+
+
+@pytest.mark.tier1
+def test_priority_preempts_and_resumes_token_identical(smoke_model):
+    """A blocked high-priority arrival evicts the youngest low-priority
+    lane; the victim resumes later (prompt + emitted tokens, remaining
+    budget) and its FULL stream is bit-identical to the never-preempted
+    reference — recompute-on-resume is invisible to the client."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(33)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(3)]
+    budgets = [6, 6, 4]
+    refs = [_ref(model, params, p, m) for p, m in zip(prompts, budgets)]
+    # 2 usable blocks, 2 lanes: the low-prio pair fills the pool; the
+    # high-prio request lands mid-decode and can only run by eviction
+    pb = _paged(cfg, params, num_blocks=3, max_blocks=1, width=2)
+    server = AsyncServer(pb, clock=FakeClock(), step_time_s=STEP)
+    handles = server.run_sync(open_loop_workload(
+        prompts, budgets, [0.0, 0.0, 2.5 * STEP], [0, 0, 1]))
+    for h, ref in zip(handles, refs):
+        assert h.tokens == ref and h.terminal_events == 1, h.rid
+    assert server.preemptions == 1
+    assert pb.preemptions == 1           # the batcher-side counter agrees
+    victim = server.telemetry.traces[1]  # youngest low-prio lane (rid 1)
+    assert victim.preemptions == 1 and victim.readmits == 1
+    assert server.telemetry.traces[2].preemptions == 0
+    pb.kv.assert_drained()
+
+
+@pytest.mark.tier1
+def test_preempt_api_validation(smoke_model):
+    cfg, model, params = smoke_model
+    pb = _paged(cfg, params, num_blocks=9)
+    with pytest.raises(ValueError, match="idle lane"):
+        pb.preempt(0)
+
+
+@pytest.mark.tier1
+def test_stall_detection_raises(smoke_model):
+    """A request that can NEVER admit (needs more blocks than any sequence
+    may hold) must fail loudly, not spin forever."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 2 * BS).astype(np.int32)
+    pb = _paged(cfg, params, num_blocks=9, max_blocks=1)
+    server = AsyncServer(pb, clock=FakeClock(), step_time_s=STEP)
+    with pytest.raises(RuntimeError, match="stalled"):
+        server.run_sync(open_loop_workload([prompt], [4], [0.0]))

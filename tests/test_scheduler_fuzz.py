@@ -168,3 +168,137 @@ def test_all_arms_token_identical_and_leak_free(smoke_model, seed):
                 assert 0.0 <= st["acceptance_rate"] <= 1.0
                 assert st["decode_steps"] >= st["spec_rounds"]
         assert not batcher.queue
+
+
+# ----------------------------------------------------------- open loop ----
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("seed", [0, pytest.param(1, marks=pytest.mark.slow),
+                                  pytest.param(2, marks=pytest.mark.slow)])
+@pytest.mark.parametrize("kind", ["poisson", "burst"])
+def test_open_loop_arms_token_identical_and_leak_free(smoke_model, seed,
+                                                      kind):
+    """Open-loop fuzz arm: the same randomized workloads, but arriving on a
+    seeded Poisson / bursty schedule through the async ingress (FakeClock,
+    virtual per-tick cost — zero real sleeps). Queueing, deferral and
+    multi-tick admission must be invisible to the OUTPUT: every stream is
+    token-identical to the sequential reference, every terminal event fires
+    exactly once, and the pool drains."""
+    from repro.serving.ingress import (AsyncServer, arrival_times,
+                                       open_loop_workload)
+    from repro.serving.telemetry import FakeClock
+    cfg, model, params = smoke_model
+    prompts, budgets, order = _workload(cfg, seed)
+    max_len = max(LEN_PALETTE) + 8 + 1
+    refs = [_reference(model, params, p, m)
+            for p, m in zip(prompts, budgets)]
+    times = arrival_times(kind, 200.0, len(prompts), seed)
+    arms = _arms(cfg, params, len(prompts), max_len)
+    for name in ("dense", "paged_host", "paged_device", "mixed"):
+        batcher = arms[name]()
+        server = AsyncServer(batcher, clock=FakeClock(), step_time_s=1e-3)
+        handles = server.run_sync(open_loop_workload(
+            [prompts[i] for i in order], [budgets[i] for i in order], times))
+        for j, h in enumerate(handles):       # handle j carries rid order[j]
+            assert h.done and h.terminal_events == 1, (name, kind, seed, j)
+            assert h.tokens == refs[order[j]], (name, kind, seed, j)
+        if isinstance(batcher, PagedBatcher):
+            batcher.kv.assert_drained()
+        assert not batcher.busy and not batcher.queue
+        rep = server.report()
+        assert rep["n_finished"] == len(prompts)
+        assert all(t.queue_delay >= 0
+                   for t in server.telemetry.traces.values())
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("seed", [3, pytest.param(4, marks=pytest.mark.slow),
+                                  pytest.param(5, marks=pytest.mark.slow)])
+def test_random_preemption_points_token_identical(smoke_model, seed):
+    """Preempt→resume property fuzz: at RANDOM steps, evict a random live
+    lane mid-decode and resubmit it as prompt+emitted with the remaining
+    budget. However the preemptions interleave, the stitched streams must
+    be bit-identical to the never-preempted sequential reference and the
+    pool must drain (retired-through-cache blocks included). Terminates
+    because every attempt emits at least its prefill token."""
+    cfg, model, params = smoke_model
+    prompts, budgets, order = _workload(cfg, seed)
+    max_len = max(LEN_PALETTE) + 8 + 1
+    nb = 1 + len(prompts) * -(-max_len // BS)
+    refs = [_reference(model, params, p, m)
+            for p, m in zip(prompts, budgets)]
+    batcher = PagedBatcher(cfg, params, sync="host", num_blocks=nb,
+                           block_size=BS, prefix_cache=True,
+                           max_blocks_per_seq=-(-max_len // BS),
+                           decode_width=3, buckets=(32, 64),
+                           cache_dtype=jnp.float32)
+    rng = np.random.default_rng(100 + seed)
+    reqs = {i: Request(rid=i, prompt=prompts[i], max_new_tokens=budgets[i])
+            for i in order}
+    for i in order:
+        batcher.submit(reqs[i])
+    prefix = {i: [] for i in order}          # tokens from prior attempts
+    steps = 0
+    while batcher.busy:
+        batcher.step()
+        steps += 1
+        assert steps < 500, "preemption fuzz failed to converge"
+        if rng.random() < 0.35:
+            cands = [li for li, ln in enumerate(batcher.lanes)
+                     if ln is not None and ln.budget > 0]
+            if cands:
+                victim = batcher.preempt(int(rng.choice(cands)))
+                prefix[victim.rid].extend(int(t) for t in victim.output)
+                rem = budgets[victim.rid] - len(prefix[victim.rid])
+                assert rem >= 1, "preempted a finishing lane"
+                resumed = Request(
+                    rid=victim.rid,
+                    prompt=np.concatenate([
+                        prompts[victim.rid],
+                        np.asarray(prefix[victim.rid], np.int32)]),
+                    max_new_tokens=rem)
+                reqs[victim.rid] = resumed
+                batcher.submit(resumed)
+    for i in order:
+        assert reqs[i].done, (seed, i)
+        assert prefix[i] + reqs[i].output == refs[i], (seed, i)
+    batcher.kv.assert_drained()
+    assert batcher.preemptions > 0, "fuzz never exercised a preemption"
+
+
+@pytest.mark.tier1
+def test_preempt_resume_reuses_prefix_cache(smoke_model):
+    """Recompute-on-resume rides the prefix cache: preempting a request
+    whose KV spans full blocks and resuming it must allocate strictly
+    FEWER fresh blocks with the cache on (retired blocks hash-match and
+    reattach) than cold — and produce the identical stream either way."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(77)
+    prompt = rng.integers(0, cfg.vocab_size, 3 * BS).astype(np.int32)
+    n = 6
+    ref = _reference(model, params, prompt, n)
+    allocs = {}
+    for cached in (False, True):
+        batcher = PagedBatcher(cfg, params, sync="host", num_blocks=17,
+                               block_size=BS, max_blocks_per_seq=5,
+                               decode_width=2, buckets=(32, 64),
+                               cache_dtype=jnp.float32, prefix_cache=cached)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=n)
+        batcher.submit(req)
+        batcher.step()
+        batcher.step()                       # a few tokens in, mid-decode
+        victim = batcher.preempt(0)
+        emitted = [int(t) for t in victim.output]
+        assert 1 <= len(emitted) < n
+        resumed = Request(rid=0, prompt=np.concatenate([
+            prompt, np.asarray(emitted, np.int32)]),
+            max_new_tokens=n - len(emitted))
+        batcher.submit(resumed)
+        while batcher.busy:
+            batcher.step()
+        assert emitted + resumed.output == ref, cached
+        batcher.kv.assert_drained()
+        allocs[cached] = batcher.kv.allocator.total_allocs
+        if cached:
+            assert batcher.stats()["prefix_hits"] > 0
+    assert allocs[True] < allocs[False], allocs

@@ -52,6 +52,43 @@ def test_continuous_batcher_matches_sequential(smoke_model):
         assert r.output == _ref_generate(model, params, jnp.asarray(r.prompt), 5)
 
 
+def test_submit_rejects_duplicate_rid_and_empty_prompt(smoke_model):
+    """Regression: both batchers used to silently accept a duplicate rid
+    (corrupting per-request bookkeeping) and an empty prompt (which can
+    never prefill). Both must raise at submit time — and only LIVE rids
+    count as duplicates: a finished rid may be reused (preemption resumes
+    and multi-wave workloads rely on it)."""
+    from repro.serving.scheduler import PagedBatcher
+    cfg, model, params = smoke_model
+    prompt = np.arange(5, dtype=np.int32)
+
+    cb = ContinuousBatcher(cfg, params, max_batch=2, max_len=64,
+                           buckets=(32, 64))
+    pb = PagedBatcher(cfg, params, num_blocks=9, block_size=16,
+                      max_blocks_per_seq=2, decode_width=2, buckets=(32, 64),
+                      cache_dtype=jnp.float32)
+    for b in (cb, pb):
+        with pytest.raises(ValueError, match="empty prompt"):
+            b.submit(Request(rid=0, prompt=np.zeros((0,), np.int32),
+                             max_new_tokens=2))
+        b.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+        with pytest.raises(ValueError, match="duplicate"):
+            b.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+
+    # in-flight (admitted, not just queued) rids are duplicates too...
+    pb.step()
+    assert pb.busy            # still mid-decode after one step
+    with pytest.raises(ValueError, match="duplicate"):
+        pb.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+    # ...but a FINISHED rid is reusable
+    while pb.busy:
+        pb.step()
+    pb.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    while pb.busy:
+        pb.step()
+    pb.kv.assert_drained()
+
+
 def test_sampler_greedy_is_argmax():
     logits = jax.random.normal(RNG, (4, 100))
     t = sample(logits, RNG, SamplerConfig(temperature=0.0))

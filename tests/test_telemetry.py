@@ -1,0 +1,236 @@
+"""Telemetry unit tests: percentile math, per-request trace metrics, clock
+behavior and report reproducibility — all on hand-built event streams with
+known answers, zero model, zero wall clock."""
+import asyncio
+import math
+
+import pytest
+
+from repro.serving.telemetry import (Clock, FakeClock, MonotonicClock,
+                                     RequestTrace, Telemetry, percentile,
+                                     summarize)
+
+
+# ------------------------------------------------------------- percentiles --
+
+@pytest.mark.tier1
+def test_percentile_linear_interpolation_exact():
+    # 0..99: pos = 99 * q/100, linear between neighbors
+    xs = list(range(100))
+    assert percentile(xs, 50) == pytest.approx(49.5)
+    assert percentile(xs, 95) == pytest.approx(94.05)
+    assert percentile(xs, 99) == pytest.approx(98.01)
+    assert percentile(xs, 0) == 0.0
+    assert percentile(xs, 100) == 99.0
+
+
+@pytest.mark.tier1
+def test_percentile_two_points():
+    assert percentile([0.0, 10.0], 50) == pytest.approx(5.0)
+    assert percentile([0.0, 10.0], 95) == pytest.approx(9.5)
+    assert percentile([0.0, 10.0], 99) == pytest.approx(9.9)
+
+
+@pytest.mark.tier1
+def test_percentile_order_independent():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert percentile(xs, 50) == 3.0
+    assert percentile(sorted(xs, reverse=True), 50) == 3.0
+
+
+@pytest.mark.tier1
+def test_percentile_edge_cases():
+    assert percentile([], 50) is None
+    # a singleton is every percentile of itself
+    for q in (0, 50, 95, 99, 100):
+        assert percentile([7.25], q) == 7.25
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+
+
+@pytest.mark.tier1
+def test_summarize_shape_and_values():
+    s = summarize([2.0, 4.0, 6.0])
+    assert s["n"] == 3 and s["mean"] == 4.0 and s["max"] == 6.0
+    assert s["p50"] == 4.0
+    empty = summarize([])
+    assert empty == {"n": 0, "mean": None, "p50": None, "p95": None,
+                     "p99": None, "max": None}
+
+
+# ------------------------------------------------------------------ traces --
+
+@pytest.mark.tier1
+def test_trace_metrics_hand_computed():
+    clock = FakeClock()
+    tel = Telemetry(clock)
+    tel.on_enqueue(0, at=0.0)
+    tel.on_admit(0, at=2.0)
+    tel.on_token(0, at=3.0)      # first token: ttft = 3 - 0
+    tel.on_token(0, at=4.0)
+    tel.on_token(0, at=6.0)      # tpot = (6 - 3) / 2 = 1.5, excludes TTFT
+    tel.on_finish(0, at=6.0)
+    tr = tel.traces[0]
+    assert tr.ttft == pytest.approx(3.0)
+    assert tr.queue_delay == pytest.approx(2.0)   # admit - enqueue
+    assert tr.tpot == pytest.approx(1.5)
+    assert tr.n_tokens == 3 and tr.finished
+
+
+@pytest.mark.tier1
+def test_tpot_undefined_below_two_tokens():
+    tel = Telemetry(FakeClock())
+    tel.on_enqueue(0, at=0.0)
+    assert tel.traces[0].tpot is None and tel.traces[0].ttft is None
+    tel.on_token(0, at=5.0)
+    assert tel.traces[0].tpot is None            # one token: no gap yet
+    assert tel.traces[0].ttft == 5.0
+
+
+@pytest.mark.tier1
+def test_readmit_preserves_first_admit_stamp():
+    tel = Telemetry(FakeClock())
+    tel.on_enqueue(0, at=1.0)
+    tel.on_admit(0, at=2.0)
+    tel.on_preempt(0)
+    tel.on_admit(0, at=9.0)                      # resume: NOT the anchor
+    tr = tel.traces[0]
+    assert tr.queue_delay == pytest.approx(1.0)
+    assert tr.readmits == 1 and tr.preemptions == 1
+
+
+@pytest.mark.tier1
+def test_event_contract_violations_raise():
+    tel = Telemetry(FakeClock())
+    tel.on_enqueue(0, at=0.0)
+    with pytest.raises(ValueError, match="already enqueued"):
+        tel.on_enqueue(0, at=1.0)
+    with pytest.raises(KeyError, match="never enqueued"):
+        tel.on_token(99)
+    tel.on_finish(0, at=1.0)
+    with pytest.raises(ValueError, match="finished twice"):
+        tel.on_finish(0, at=2.0)
+
+
+# ------------------------------------------------------------------ report --
+
+def _three_request_stream(tel: Telemetry) -> None:
+    """Hand-built stream with known aggregates:
+    rid 0: enq 0, admit 1, tokens 2/3/4, finish 4  -> ttft 2, qd 1, tpot 1
+    rid 1: enq 0, admit 3, tokens 5/9,   finish 9  -> ttft 5, qd 3, tpot 4
+    rid 2: enq 1, admit 2, token  4,     finish 4  -> ttft 3, qd 1, no tpot
+    """
+    for rid, enq in ((0, 0.0), (1, 0.0), (2, 1.0)):
+        tel.on_enqueue(rid, at=enq)
+    tel.on_admit(0, at=1.0)
+    tel.on_admit(1, at=3.0)
+    tel.on_admit(2, at=2.0)
+    for rid, ts in ((0, (2.0, 3.0, 4.0)), (1, (5.0, 9.0)), (2, (4.0,))):
+        for t in ts:
+            tel.on_token(rid, at=t)
+    tel.on_finish(0, at=4.0)
+    tel.on_finish(1, at=9.0)
+    tel.on_finish(2, at=4.0)
+
+
+@pytest.mark.tier1
+def test_report_aggregates_hand_computed():
+    tel = Telemetry(FakeClock())
+    _three_request_stream(tel)
+    rep = tel.report(slo_ms=4000.0)
+    assert rep["n_requests"] == rep["n_finished"] == 3
+    assert rep["n_tokens"] == 6
+    assert rep["ttft_ms"]["p50"] == pytest.approx(3000.0)
+    assert rep["ttft_ms"]["max"] == pytest.approx(5000.0)
+    assert rep["queue_delay_ms"]["p50"] == pytest.approx(1000.0)
+    assert rep["tpot_ms"]["n"] == 2                 # rid 2 has no gap
+    assert rep["tpot_ms"]["mean"] == pytest.approx(2500.0)
+    assert rep["makespan_s"] == pytest.approx(9.0)  # min enq 0 .. max fin 9
+    assert rep["throughput_tok_s"] == pytest.approx(6 / 9)
+    # SLO 4000 ms: rids 0 (2s) and 2 (3s) meet it, rid 1 (5s) misses
+    assert rep["slo_attainment"] == pytest.approx(2 / 3)
+    assert rep["goodput_req_s"] == pytest.approx(2 / 9)
+
+
+@pytest.mark.tier1
+def test_report_without_slo_counts_all_finished():
+    tel = Telemetry(FakeClock())
+    _three_request_stream(tel)
+    rep = tel.report()
+    assert rep["slo_ms"] is None
+    assert rep["slo_attainment"] == 1.0
+    assert rep["goodput_req_s"] == pytest.approx(3 / 9)
+
+
+@pytest.mark.tier1
+def test_report_empty_and_unfinished():
+    tel = Telemetry(FakeClock())
+    assert tel.report()["n_requests"] == 0
+    assert tel.report()["makespan_s"] is None
+    tel.on_enqueue(0, at=0.0)                      # enqueued, never finished
+    rep = tel.report()
+    assert rep["n_requests"] == 1 and rep["n_finished"] == 0
+    assert rep["goodput_req_s"] is None
+
+
+@pytest.mark.tier1
+def test_report_bitwise_reproducible():
+    reps = []
+    for _ in range(2):
+        tel = Telemetry(FakeClock())
+        _three_request_stream(tel)
+        reps.append(tel.report(slo_ms=100.0))
+    assert reps[0] == reps[1]
+
+
+# ------------------------------------------------------------------ clocks --
+
+@pytest.mark.tier1
+def test_fake_clock_advance_and_sleep():
+    clock = FakeClock(start=5.0)
+    assert clock.now() == 5.0
+    clock.advance(2.5)
+    assert clock.now() == 7.5
+    with pytest.raises(ValueError, match="backwards"):
+        clock.advance(-1.0)
+
+    async def drive():
+        await clock.sleep(3.0)
+        await clock.sleep(-1.0)       # clamped, never goes backwards
+        return clock.now()
+
+    assert asyncio.run(drive()) == 10.5
+
+
+@pytest.mark.tier1
+def test_monotonic_clock_is_a_clock_and_moves_forward():
+    clock = MonotonicClock()
+    assert isinstance(clock, Clock) and isinstance(FakeClock(), Clock)
+    t0 = clock.now()
+    assert clock.now() >= t0
+    assert not hasattr(clock, "advance")   # the ingress gate relies on this
+
+    async def drive():                     # zero-sleep: yields, no real wait
+        await clock.sleep(0.0)
+
+    asyncio.run(drive())
+
+
+@pytest.mark.tier1
+def test_telemetry_stamps_from_injected_clock():
+    clock = FakeClock()
+    tel = Telemetry(clock)
+    tel.on_enqueue(0)                      # at= omitted -> clock.now()
+    clock.advance(4.0)
+    tel.on_admit(0)
+    assert tel.traces[0].queue_delay == pytest.approx(4.0)
+    assert math.isclose(tel.traces[0].enqueue_t, 0.0)
+
+
+@pytest.mark.tier1
+def test_trace_defaults():
+    tr = RequestTrace(rid=3, priority=1)
+    assert not tr.finished and tr.ttft is None and tr.queue_delay is None
+    assert tr.token_ts == [] and tr.readmits == 0
