@@ -1,0 +1,189 @@
+"""Quantized serving: capacity, parity, re-planning, and accuracy drift.
+
+Four arms, one per claim the quantized path makes:
+
+  * ``quant.capacity_*`` — EQUAL pool bytes, fp(bf16) vs int8 KV: the int8
+    pool (1-byte codes + per-slot bf16 scales) holds ~1.88x the token
+    blocks, so a flood of short requests sustains >= 1.8x the peak
+    concurrent sequences — the serving-capacity lever on a capacity-bound
+    unified-memory SoC.
+  * ``quant.serve_*`` — W4A16 weights + int8 KV through the host-synced,
+    fused-window, and mixed-batch schedulers: greedy outputs must be
+    token-identical to the sequential quantized reference (same codes
+    dequantized everywhere), with tok/s reported per arm.
+  * ``quant.plan_*`` — the solver re-plans under quantized weight-stream
+    bytes: fp vs int8 vs W4A16 plans on the REAL llama3-8b config must
+    differ on at least one decode shape (the re-planned split is recorded
+    in BENCH_quant.json).
+  * ``quant.nll_*`` — the perplexity-drift mini-eval of
+    tests/test_quant_quality.py, reported as a number next to the speed
+    claims: fp vs int8 vs W4A16 NLL on real smollm-135m.
+
+Rows land in ``BENCH_quant.json`` (benchmarks/run.py folds the metrics
+into BENCH_summary.json).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from repro.configs import get_config, get_smoke_config
+from repro.core.engine import build_plan
+from repro.models import build_model
+from repro.models.quant import quantize_params, score_nll
+from repro.serving.scheduler import PagedBatcher, Request
+
+BS = 16                 # block size for both capacity arms
+NB_INT8 = 64            # int8 pool blocks; the fp arm gets the SAME bytes
+
+
+def _pool_blocks_at_equal_bytes(cfg) -> int:
+    """fp-bf16 blocks purchasable with NB_INT8 int8 blocks' bytes."""
+    slot = cfg.n_kv_heads * cfg.head_dim
+    int8_block = 2 * cfg.n_layers * (BS * slot * 1 + BS * 2)  # codes+scales
+    fp_block = 2 * cfg.n_layers * BS * slot * 2
+    return NB_INT8 * int8_block // fp_block
+
+
+def _capacity_arm(cfg, params, kv_quant, num_blocks):
+    """Flood of 1-block requests; returns (batcher, elapsed_s, tokens)."""
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 12).astype(
+                        np.int32),
+                    max_new_tokens=4)
+            for i in range(80)]
+    cb = PagedBatcher(cfg, params, num_blocks=num_blocks, block_size=BS,
+                      max_blocks_per_seq=1, decode_width=70,
+                      buckets=(32, 64), sync="device", window=4,
+                      kv_quant=kv_quant)
+    t0 = time.perf_counter()
+    cb.run(reqs)
+    dt = time.perf_counter() - t0
+    cb.kv.assert_drained()
+    return cb, dt, sum(len(r.output) for r in reqs)
+
+
+def _paged_reference(model, params, prompt, n, kv_quant, max_len=96):
+    """Sequential single-request quantized oracle (paged path)."""
+    nbs = -(-max_len // BS)
+    pool = model.init_paged_cache(num_blocks=nbs + 1, block_size=BS,
+                                  dtype=jnp.float32, kv_quant=kv_quant)
+    bt = jnp.arange(1, nbs + 1, dtype=jnp.int32)[None]
+    logits, pool = model.paged_prefill(params, jnp.asarray(prompt)[None],
+                                       pool, block_table=bt, start_index=0)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    length = len(prompt)
+    for _ in range(n - 1):
+        logits, pool = model.paged_decode_step(
+            params, jnp.asarray([[out[-1]]], jnp.int32), pool,
+            block_tables=bt, lengths=jnp.asarray([length]))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        length += 1
+    return out
+
+
+def main() -> None:
+    cfg = get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    metrics: dict = {}
+
+    # ---- capacity at equal pool bytes: bf16 KV vs int8 KV ----------------
+    nb_fp = _pool_blocks_at_equal_bytes(cfg)
+    arms = {}
+    for kv, nb in ((None, nb_fp), ("int8", NB_INT8)):
+        cb, dt, tok = _capacity_arm(cfg, params, kv, nb)
+        name = kv or "bf16"
+        arms[name] = cb
+        emit(f"quant.capacity_{name}", dt * 1e6,
+             f"blocks={nb};pool_bytes={cb.kv.pool_bytes()};"
+             f"peak={cb.peak_active};tok_s={tok / dt:.1f}")
+    assert arms["bf16"].kv.pool_bytes() == arms["int8"].kv.pool_bytes(), \
+        "capacity arms must compare at equal pool bytes"
+    ratio = arms["int8"].peak_active / arms["bf16"].peak_active
+    assert ratio >= 1.8, (
+        f"int8 KV peak concurrency {arms['int8'].peak_active} vs bf16 "
+        f"{arms['bf16'].peak_active}: ratio {ratio:.2f} < 1.8 at equal "
+        "pool memory")
+    metrics.update(peak_bf16=arms["bf16"].peak_active,
+                   peak_int8=arms["int8"].peak_active,
+                   capacity_ratio=round(ratio, 2),
+                   pool_bytes=arms["int8"].kv.pool_bytes())
+
+    # ---- quantized token identity across scheduler arms ------------------
+    fcfg = cfg.with_(param_dtype="float32", compute_dtype="float32")
+    fmodel = build_model(fcfg)
+    fparams = fmodel.init(jax.random.PRNGKey(7))
+    qparams = quantize_params(fparams, fcfg, "w4a16")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, fcfg.vocab_size, s).astype(np.int32)
+               for s in (9, 33, 20, 48, 57)]
+    refs = [_paged_reference(fmodel, qparams, p, 6, "int8")
+            for p in prompts]
+    match = True
+    for arm, kw in (("host", dict(sync="host")),
+                    ("device", dict(sync="device", window=3)),
+                    ("mixed", dict(sync="device", window=3,
+                                   mixed_batch=True))):
+        cb = PagedBatcher(fcfg, fparams, num_blocks=40, block_size=BS,
+                          max_blocks_per_seq=5, decode_width=3,
+                          buckets=(32, 64), cache_dtype=jnp.float32,
+                          weight_quant="w4a16", kv_quant="int8", **kw)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+        t0 = time.perf_counter()
+        cb.run(reqs)
+        dt = time.perf_counter() - t0
+        cb.kv.assert_drained()
+        ok = all(r.output == refs[r.rid] for r in reqs)
+        match &= ok
+        tok = sum(len(r.output) for r in reqs)
+        emit(f"quant.serve_{arm}", dt * 1e6,
+             f"w=w4a16;kv=int8;tok_s={tok / dt:.1f};match={ok}")
+    assert match, "quantized greedy outputs diverged from the sequential " \
+                  "quantized reference"
+    metrics["token_identical"] = match
+
+    # ---- solver re-planning under quantized weight bytes -----------------
+    real = get_config("llama3-8b")
+    _, fp_plan = build_plan(real)
+    for fmt in ("int8", "w4a16"):
+        _, qplan = build_plan(real, weight_quant=fmt)
+        diffs = sorted(k for k, d in qplan.decisions.items()
+                       if fp_plan.decisions[k].describe()
+                       != d.describe())
+        assert diffs, f"{fmt}: solver plan identical to fp on every shape"
+        site, m = diffs[0]
+        metrics[f"plan_diffs_{fmt}"] = len(diffs)
+        metrics[f"replan_{fmt}"] = (
+            f"{site}@M={m}: {fp_plan.decisions[(site, m)].describe()}"
+            f" -> {qplan.decisions[(site, m)].describe()}")
+        emit(f"quant.plan_{fmt}", 0.0,
+             f"diffs={len(diffs)};example={site}@M={m}")
+
+    # ---- accuracy drift (the quality gate's metric, as a number) ---------
+    scfg = get_config("smollm-135m").with_(param_dtype="float32",
+                                           compute_dtype="float32")
+    smodel = build_model(scfg)
+    sparams = smodel.init(jax.random.PRNGKey(11))
+    tokens = jax.random.randint(jax.random.PRNGKey(12), (2, 129),
+                                0, scfg.vocab_size)
+    base = score_nll(smodel, sparams, tokens)
+    metrics["nll_fp"] = round(base, 4)
+    emit("quant.nll_fp", 0.0, f"nll={base:.4f}")
+    for fmt in ("int8", "w4a16"):
+        q = score_nll(smodel, quantize_params(sparams, scfg, fmt), tokens)
+        metrics[f"nll_drift_{fmt}"] = round(abs(q - base), 4)
+        emit(f"quant.nll_{fmt}", 0.0,
+             f"nll={q:.4f};drift={abs(q - base):.4f}")
+
+    emit_json("quant", metrics)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,8 @@ import json
 import sys
 import traceback
 
+import jax
+
 from benchmarks import common
 from benchmarks.common import REPO_ROOT
 
@@ -30,6 +32,7 @@ MODULES = [
     "benchmarks.bench_spec",              # speculative decoding vs plain decode
     "benchmarks.bench_prefix",            # prefix caching vs cold prefill
     "benchmarks.bench_open_loop",         # open-loop TTFT/TPOT percentiles
+    "benchmarks.bench_quant",             # quantized weights + int8 KV pool
     "benchmarks.roofline_report",         # §Roofline
 ]
 
@@ -62,6 +65,10 @@ def main() -> None:
             traceback.print_exc()
             common.reset_rows()   # don't leak this bench's rows into the
             #                       next module's BENCH_<name>.json
+        # compiled executables pin mmapped code pages; a full sweep in one
+        # process can exhaust vm.max_map_count (jaxlib segfaults in
+        # backend_compile) — drop each module's executables before the next
+        jax.clear_caches()
     summary = aggregate()
     print(f"# ---- aggregate: {summary['n_benches']} BENCH_*.json -> "
           "BENCH_summary.json ----")

@@ -26,9 +26,9 @@ EXPECTED_MODULES = (
     "test_attention", "test_core", "test_distributed", "test_fused_decode",
     "test_ingress", "test_kernel_conformance", "test_kernels",
     "test_mixed_batch", "test_models", "test_paged_cache",
-    "test_prefix_cache", "test_sampler", "test_scheduler_fuzz",
-    "test_serving", "test_solver_properties", "test_spec",
-    "test_system", "test_telemetry", "test_training",
+    "test_prefix_cache", "test_quant_quality", "test_sampler",
+    "test_scheduler_fuzz", "test_serving", "test_solver_properties",
+    "test_spec", "test_system", "test_telemetry", "test_training",
 )
 
 

@@ -60,14 +60,23 @@ def _ceil(a: int, b: int) -> int:
 
 
 def mxu_matmul_parts(M: int, K: int, N: int, spec: TPUSpec = V5E,
-                     *, bytes_per_el: int = 2) -> tuple[float, int]:
+                     *, bytes_per_el: int = 2,
+                     w_bytes_per_el: float | None = None) -> tuple[float, int]:
     """(compute_us, hbm_bytes) for x[M,K] @ w[K,N] on the MXU path
     (weight-stationary systolic model).
 
     cycles = sum over (k,n) weight tiles of (reload + ceil(M/128) row-streams)
     -> stage performance from the ceils, order/shape sensitivity from the
     reload term scaling with K*N but amortizing over M.
+
+    ``w_bytes_per_el`` decouples the weight stream from the activation dtype
+    for weight-only quantization (int8 -> 1, packed int4 -> 0.5): compute
+    cycles are unchanged (dequant happens in VMEM, the MXU still runs
+    high-precision MACs) but the weight HBM traffic — what a memory-bound
+    decode step actually pays — shrinks with the storage dtype.
     """
+    if w_bytes_per_el is None:
+        w_bytes_per_el = bytes_per_el
     t = spec.mxu_tile
     tm, tk, tn = _ceil(M, t), _ceil(K, t), _ceil(N, t)
     reload_cycles = t                       # systolic pipeline refill per tile
@@ -75,7 +84,7 @@ def mxu_matmul_parts(M: int, K: int, N: int, spec: TPUSpec = V5E,
     compute_us = compute_cycles / spec.clock_hz * 1e6
     # memory: activations once, weights once (or more if > VMEM working set),
     # outputs once
-    w_bytes = K * N * bytes_per_el
+    w_bytes = K * N * w_bytes_per_el
     x_bytes = M * K * bytes_per_el
     o_bytes = M * N * bytes_per_el
     reload_factor = 1.0 if w_bytes + x_bytes < spec.vmem_bytes else \
@@ -85,11 +94,15 @@ def mxu_matmul_parts(M: int, K: int, N: int, spec: TPUSpec = V5E,
 
 
 def xla_matmul_parts(M: int, K: int, N: int, spec: TPUSpec = V5E,
-                     *, bytes_per_el: int = 2) -> tuple[float, int]:
+                     *, bytes_per_el: int = 2,
+                     w_bytes_per_el: float | None = None) -> tuple[float, int]:
     """(compute_us incl. kernel overhead, hbm_bytes) for the flexible XLA
-    path: linear-in-FLOPs (GPU-1) at a lower effective peak, any shape."""
+    path: linear-in-FLOPs (GPU-1) at a lower effective peak, any shape.
+    ``w_bytes_per_el`` — see :func:`mxu_matmul_parts`."""
+    if w_bytes_per_el is None:
+        w_bytes_per_el = bytes_per_el
     flops = 2.0 * M * K * N
-    nbytes = (M * K + K * N + M * N) * bytes_per_el
+    nbytes = (M * K + M * N) * bytes_per_el + K * N * w_bytes_per_el
     compute_us = flops / (spec.peak_flops_bf16 * spec.xla_eff) * 1e6 \
         + spec.xla_kernel_overhead_us
     return compute_us, int(nbytes)
@@ -111,16 +124,23 @@ def combine_dual(parts_a: tuple[float, int], parts_b: tuple[float, int],
     return max(ca, cb, mem_us)
 
 
+WEIGHT_BYTES_PER_EL = {None: 2.0, "int8": 1.0, "w4a16": 0.5}
+
+
 def mxu_matmul_time_us(M: int, K: int, N: int, spec: TPUSpec = V5E,
-                       *, bytes_per_el: int = 2) -> float:
+                       *, bytes_per_el: int = 2,
+                       w_bytes_per_el: float | None = None) -> float:
     return combine_single(mxu_matmul_parts(M, K, N, spec,
-                                           bytes_per_el=bytes_per_el), spec)
+                                           bytes_per_el=bytes_per_el,
+                                           w_bytes_per_el=w_bytes_per_el), spec)
 
 
 def xla_matmul_time_us(M: int, K: int, N: int, spec: TPUSpec = V5E,
-                       *, bytes_per_el: int = 2) -> float:
+                       *, bytes_per_el: int = 2,
+                       w_bytes_per_el: float | None = None) -> float:
     return combine_single(xla_matmul_parts(M, K, N, spec,
-                                           bytes_per_el=bytes_per_el), spec)
+                                           bytes_per_el=bytes_per_el,
+                                           w_bytes_per_el=w_bytes_per_el), spec)
 
 
 def dual_path_memory_time_us(bytes_a: int, bytes_b: int,

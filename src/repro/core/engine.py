@@ -37,8 +37,9 @@ from .sync import generate_host_loop, generate_on_device
 
 def build_plan(cfg, *, sync_mode: str = "fast",
                table: Optional[LatencyTable] = None, mixed_pairs=(),
-               verify_ks=(), extra_ms=()) -> tuple[LatencyTable,
-                                                   PartitionPlan]:
+               verify_ks=(), extra_ms=(),
+               weight_quant: Optional[str] = None) -> tuple[LatencyTable,
+                                                            PartitionPlan]:
     """Offline phase (paper Fig 11 left half): profile the model's weight
     shapes, then solve the per-(site, M) partitioning decisions. Shared by
     the single-stream engine and the paged serving scheduler so both run
@@ -49,20 +50,26 @@ def build_plan(cfg, *, sync_mode: str = "fast",
     solved into ``plan.verify_decisions`` (the VERIFY site class).
     ``extra_ms``: extra token counts added to the solve grid — the
     prefix-cache scheduler's suffix-chunk lengths, so warm-path chunks get
-    first-class solved decisions."""
-    table = table or profile_analytic(cfg)
-    solver = PartitionSolver(table, sync_mode=sync_mode)
+    first-class solved decisions. ``weight_quant`` (None | 'int8' |
+    'w4a16'): profile and solve against the quantized weight-stream bytes —
+    memory-bound decode shapes re-plan when the weight HBM traffic halves
+    (or quarters), so a quantized deployment gets its own plan."""
+    table = table or profile_analytic(cfg, weight_quant=weight_quant)
+    solver = PartitionSolver(table, sync_mode=sync_mode,
+                             weight_quant=weight_quant)
     return table, solver.solve(cfg, mixed_pairs=mixed_pairs,
                                verify_ks=verify_ks, extra_ms=extra_ms)
 
 
 def build_hetero_ctx(cfg, mode: str, *, sync_mode: str = "fast",
                      interpret: bool = True, mixed_pairs=(),
-                     verify_ks=(), extra_ms=()) -> HeteroCtx:
+                     verify_ks=(), extra_ms=(),
+                     weight_quant: Optional[str] = None) -> HeteroCtx:
     """Profile + solve + wrap in the HeteroCtx that models thread through
     every matmul site (including the LM head)."""
     _, plan = build_plan(cfg, sync_mode=sync_mode, mixed_pairs=mixed_pairs,
-                         verify_ks=verify_ks, extra_ms=extra_ms)
+                         verify_ks=verify_ks, extra_ms=extra_ms,
+                         weight_quant=weight_quant)
     return HeteroCtx(mode=mode, plan=plan, interpret=interpret)
 
 

@@ -33,7 +33,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hetero_matmul.ops import mxu_matmul
+from repro.kernels.hetero_matmul.ops import (mxu_matmul, mxu_q4_matmul,
+                                             mxu_quant_matmul)
 
 from .characteristics import V5E, mxu_matmul_time_us
 from .solver import Decision, PartitionPlan
@@ -48,6 +49,83 @@ def _pad_to(x, mult, axis):
     pads = [(0, 0)] * x.ndim
     pads[axis] = (0, mult - r)
     return jnp.pad(x, pads)
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantWeight:
+    """A quantized weight that flows anywhere an fp weight array does.
+
+    Per-output-channel symmetric quantization in one of two storage formats
+    (the paper's deployment stances):
+
+      * ``int8``  — ``wq`` int8 ``[..., K, N]``, ``scale`` f32 ``[..., N]``
+      * ``w4a16`` — ``wq`` int8 ``[..., ceil(K/2), N]`` with two int4 codes
+        packed per byte along K (rows 2r, 2r+1 -> lo, hi nibbles), same
+        per-column scale
+
+    Registered as a pytree node (arrays are children, ``fmt``/``k`` are
+    static aux data) so stacked per-layer quantized weights thread through
+    ``lax.scan``/``jit`` exactly like fp arrays: scan slices the leading
+    layer axis of ``wq`` and ``scale`` and the model sees a per-layer
+    ``QuantWeight``. ``k`` is the LOGICAL contraction dim — the int4 packer
+    zero-pads odd K, so storage and logical K can differ.
+    """
+
+    def __init__(self, wq, scale, fmt: str, k: int):
+        assert fmt in ("int8", "w4a16"), fmt
+        self.wq = wq
+        self.scale = scale
+        self.fmt = fmt
+        self.k = int(k)
+
+    def tree_flatten(self):
+        return (self.wq, self.scale), (self.fmt, self.k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def shape(self):
+        """Logical [..., K, N] shape (what the fp weight would report)."""
+        return (*self.wq.shape[:-2], self.k, self.wq.shape[-1])
+
+    @property
+    def n(self) -> int:
+        return self.wq.shape[-1]
+
+    def dequant(self, dtype=jnp.float32):
+        """Dequantize-then-cast reference expansion (the XLA-path execution
+        and the conformance oracle)."""
+        if self.fmt == "int8":
+            q = self.wq.astype(jnp.float32)
+        else:
+            lo = jnp.left_shift(self.wq, 4) >> 4     # sign-extended low nibble
+            hi = self.wq >> 4                        # arithmetic high nibble
+            k2, n = self.wq.shape[-2], self.wq.shape[-1]
+            q = jnp.stack([lo, hi], axis=-2).reshape(
+                *self.wq.shape[:-2], 2 * k2, n)[..., :self.k, :]
+            q = q.astype(jnp.float32)
+        return (q * self.scale[..., None, :]).astype(dtype)
+
+    def slice_n(self, a: int, b: int) -> "QuantWeight":
+        """Column (output-channel) slice — packing is along K, so any N
+        split point is representable; this is what makes the solver's
+        weight/hybrid strategies legal on quantized sites."""
+        return QuantWeight(self.wq[..., :, a:b], self.scale[..., a:b],
+                           self.fmt, self.k)
+
+
+def _weight_cols(w, a: int, b: int):
+    return w.slice_n(a, b) if isinstance(w, QuantWeight) else w[:, a:b]
+
+
+def matmul_any(x, w, name: Optional[str] = None):
+    """Plan-free matmul over fp or quantized weights — the model code's
+    fallback when no HeteroCtx is threaded (training, references)."""
+    if isinstance(w, QuantWeight):
+        return x @ w.dequant(x.dtype)
+    return x @ w
 
 
 @dataclass
@@ -74,7 +152,11 @@ class HeteroCtx:
     # ---------------------------------------------------------- primitives --
     def _mxu(self, x2, w):
         """Aligned MXU-path matmul with internal stage padding + NPU-2
-        order-exchange."""
+        order-exchange. Quantized weights dispatch the in-VMEM-dequant
+        kernels (``mxu_quant_matmul`` / ``mxu_q4_matmul``); order-exchange
+        is fp-only (a packed weight can't become the streamed operand)."""
+        if isinstance(w, QuantWeight):
+            return self._mxu_quant(x2, w)
         M, K = x2.shape
         N = w.shape[1]
         use_exchange = (self.order_exchange and
@@ -89,7 +171,27 @@ class HeteroCtx:
                            stationary=self.stationary)
         return y[:M, :N]
 
+    def _mxu_quant(self, x2, w: QuantWeight):
+        """Stage padding for the quantized MXU kernels: codes pad with 0
+        (dequants to exactly 0 against any scale), scales pad with 0 — the
+        padded columns are sliced off. x pads along K with zeros, so the
+        code rows beyond the logical K contribute nothing either way."""
+        M = x2.shape[0]
+        N = w.n
+        xp = _pad_to(_pad_to(x2, ALIGN, 0), ALIGN, 1)
+        sp = _pad_to(w.scale, ALIGN, -1)
+        if w.fmt == "int8":
+            wqp = _pad_to(_pad_to(w.wq, ALIGN, 0), ALIGN, 1)
+            y = mxu_quant_matmul(xp, wqp, sp, interpret=self.interpret)
+        else:
+            # packed rows count ceil(K/2) pads to Kp//2 (Kp = xp's padded K)
+            wqp = _pad_to(_pad_to(w.wq, ALIGN // 2, 0), ALIGN, 1)
+            y = mxu_q4_matmul(xp, wqp, sp, interpret=self.interpret)
+        return y[:M, :N]
+
     def _xla(self, x2, w):
+        if isinstance(w, QuantWeight):
+            return x2 @ w.dequant(x2.dtype)
         return x2 @ w.astype(x2.dtype)
 
     # ------------------------------------------------------------ dispatch --
@@ -134,8 +236,8 @@ class HeteroCtx:
             return self._mxu(x2, w)     # _mxu pads M internally (stage padding)
         if s == "weight":
             n = min(dec.n_split, N - 1)
-            y1 = self._mxu(x2, w[:, :n])
-            y2 = self._xla(x2, w[:, n:])
+            y1 = self._mxu(x2, _weight_cols(w, 0, n))
+            y2 = self._xla(x2, _weight_cols(w, n, N))
             return jnp.concatenate([y1, y2], axis=-1)
         if s == "act":
             b = min(dec.m_bucket, M - 1) if dec.m_bucket < M else M - ALIGN
@@ -147,8 +249,8 @@ class HeteroCtx:
             b = min(dec.m_bucket, M - 1)
             b = max(b, 1)
             n = min(dec.n_split, N - 1)
-            y1a = self._mxu(x2[:b], w[:, :n])
-            y1b = self._xla(x2[:b], w[:, n:])
+            y1a = self._mxu(x2[:b], _weight_cols(w, 0, n))
+            y1b = self._xla(x2[:b], _weight_cols(w, n, N))
             y2 = self._xla(x2[b:], w)
             return jnp.concatenate(
                 [jnp.concatenate([y1a, y1b], axis=-1), y2], axis=0)

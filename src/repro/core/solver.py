@@ -46,7 +46,8 @@ from dataclasses import dataclass, asdict, field
 from pathlib import Path
 from typing import Optional
 
-from .characteristics import (TPUSpec, V5E, combine_dual, combine_single,
+from .characteristics import (WEIGHT_BYTES_PER_EL, TPUSpec, V5E,
+                              combine_dual, combine_single,
                               mxu_matmul_parts, sync_cost_us,
                               xla_matmul_parts)
 from .profiler import LatencyTable, STANDARD_BUCKETS, model_weight_shapes
@@ -79,6 +80,10 @@ class PartitionPlan:
     sync_mode: str
     decisions: dict = field(default_factory=dict)   # (site, M) -> Decision
     kv_mode: Optional[str] = None
+    # weight storage dtype the plan was solved for (None | int8 | w4a16):
+    # quantized weights shrink the weight HBM stream, so decode-roofline
+    # splits re-plan — fp and quantized plans are NOT interchangeable
+    weight_quant: Optional[str] = None
     # stage-parallel serving decisions, keyed separately so a fused pair
     # (m_prefill + m_decode) can never collide with a plain-M decision:
     # (site, m_prefill, m_decode) -> Decision(strategy='mixed')
@@ -101,7 +106,7 @@ class PartitionPlan:
     def save(self, path):
         Path(path).write_text(json.dumps({
             "arch": self.arch, "sync_mode": self.sync_mode,
-            "kv_mode": self.kv_mode,
+            "kv_mode": self.kv_mode, "weight_quant": self.weight_quant,
             "decisions": [asdict(d) for d in self.decisions.values()],
             "mixed_decisions": [[list(k), asdict(d)] for k, d in
                                 self.mixed_decisions.items()],
@@ -112,7 +117,8 @@ class PartitionPlan:
     def load(cls, path) -> "PartitionPlan":
         data = json.loads(Path(path).read_text())
         plan = cls(arch=data["arch"], sync_mode=data["sync_mode"],
-                   kv_mode=data.get("kv_mode"))
+                   kv_mode=data.get("kv_mode"),
+                   weight_quant=data.get("weight_quant"))
         for d in data["decisions"]:
             dec = Decision(**d)
             plan.decisions[(dec.site, dec.M)] = dec
@@ -125,10 +131,26 @@ class PartitionPlan:
 
 class PartitionSolver:
     def __init__(self, table: LatencyTable, spec: TPUSpec = V5E,
-                 *, sync_mode: str = "fast"):
+                 *, sync_mode: str = "fast",
+                 weight_quant: str | None = None):
         self.table = table
         self.spec = spec
         self.sync_mode = sync_mode
+        # storage dtype of the weights the plan will execute against; default
+        # to whatever the latency table was profiled for so the LUT-backed
+        # candidates (xla_only/mxu_only/pad) and the analytic split
+        # candidates (weight/act/hybrid/mixed) price the same bytes
+        self.weight_quant = weight_quant if weight_quant is not None \
+            else getattr(table, "weight_quant", None)
+        self._w_bpe = WEIGHT_BYTES_PER_EL[self.weight_quant]
+
+    def _mxu_parts(self, M: int, K: int, N: int) -> tuple[float, int]:
+        return mxu_matmul_parts(M, K, N, self.spec,
+                                w_bytes_per_el=self._w_bpe)
+
+    def _xla_parts(self, M: int, K: int, N: int) -> tuple[float, int]:
+        return xla_matmul_parts(M, K, N, self.spec,
+                                w_bytes_per_el=self._w_bpe)
 
     # ---- per-site-and-M strategy search ------------------------------------
     def solve_site(self, site: str, M: int) -> Decision:
@@ -160,8 +182,8 @@ class PartitionSolver:
                 n_mxu = int(round(N * frac / ALIGN)) * ALIGN
                 if not 0 < n_mxu < N:
                     continue
-                t = combine_dual(mxu_matmul_parts(Mq, K, n_mxu, self.spec),
-                                 xla_matmul_parts(M, K, N - n_mxu, self.spec),
+                t = combine_dual(self._mxu_parts(Mq, K, n_mxu),
+                                 self._xla_parts(M, K, N - n_mxu),
                                  self.spec) + t_sync
                 cands.append(Decision(site, M, "weight", t, n_split=n_mxu,
                                       ratio=f"{n_mxu}:{N - n_mxu}"))
@@ -170,8 +192,8 @@ class PartitionSolver:
         buckets = [b for b in STANDARD_BUCKETS if b < M]
         for b in buckets:
             rem = M - b
-            t = combine_dual(mxu_matmul_parts(b, K, N, self.spec),
-                             xla_matmul_parts(rem, K, N, self.spec),
+            t = combine_dual(self._mxu_parts(b, K, N),
+                             self._xla_parts(rem, K, N),
                              self.spec) + t_sync
             cands.append(Decision(site, M, "act", t, m_bucket=b,
                                   ratio=f"{b}:{rem}tok"))
@@ -181,9 +203,9 @@ class PartitionSolver:
                     n_mxu = int(round(N * frac / ALIGN)) * ALIGN
                     if not 0 < n_mxu < N:
                         continue
-                    cm, bm = mxu_matmul_parts(b, K, n_mxu, self.spec)
-                    cx1, bx1 = xla_matmul_parts(b, K, N - n_mxu, self.spec)
-                    cx2, bx2 = xla_matmul_parts(rem, K, N, self.spec)
+                    cm, bm = self._mxu_parts(b, K, n_mxu)
+                    cx1, bx1 = self._xla_parts(b, K, N - n_mxu)
+                    cx2, bx2 = self._xla_parts(rem, K, N)
                     t = combine_dual((cm, bm), (cx1 + cx2, bx1 + bx2),
                                      self.spec) + t_sync
                     cands.append(Decision(site, M, "hybrid", t,
@@ -205,8 +227,8 @@ class PartitionSolver:
         K, N = self.table.sites[site]
         t_sync = sync_cost_us(self.sync_mode, self.spec)
         m_pre = -(-m_prefill // ALIGN) * ALIGN        # MXU stage padding
-        t = combine_dual(mxu_matmul_parts(m_pre, K, N, self.spec),
-                         xla_matmul_parts(m_decode, K, N, self.spec),
+        t = combine_dual(self._mxu_parts(m_pre, K, N),
+                         self._xla_parts(m_decode, K, N),
                          self.spec) + t_sync
         return Decision(site, m_prefill + m_decode, "mixed", t,
                         m_bucket=m_prefill,
@@ -220,10 +242,10 @@ class PartitionSolver:
         K, N = self.table.sites[site]
         t_sync = sync_cost_us(self.sync_mode, self.spec)
         m_pre = -(-m_prefill // ALIGN) * ALIGN
-        serial = (combine_single(mxu_matmul_parts(m_pre, K, N, self.spec),
+        serial = (combine_single(self._mxu_parts(m_pre, K, N),
                                  self.spec) + t_sync
-                  + combine_single(xla_matmul_parts(m_decode, K, N,
-                                                    self.spec), self.spec)
+                  + combine_single(self._xla_parts(m_decode, K, N),
+                                   self.spec)
                   + t_sync)
         return serial - self.solve_mixed(site, m_prefill, m_decode).t_us
 
@@ -252,7 +274,7 @@ class PartitionSolver:
         K, N = self.table.sites[site]
         t_sync = sync_cost_us(self.sync_mode, self.spec)
         serial = (k + 1) * (combine_single(
-            xla_matmul_parts(lanes, K, N, self.spec), self.spec) + t_sync)
+            self._xla_parts(lanes, K, N), self.spec) + t_sync)
         return serial - (self.solve_verify(site, k, lanes).t_us + t_sync)
 
     # ---- whole-model plan ---------------------------------------------------
@@ -268,7 +290,8 @@ class PartitionSolver:
         passes its suffix-chunk lengths (block-size multiples below the
         smallest bucket) so warm-path prefill chunks resolve to solved
         decisions instead of the nearest-M fallback."""
-        plan = PartitionPlan(arch=cfg.name, sync_mode=self.sync_mode)
+        plan = PartitionPlan(arch=cfg.name, sync_mode=self.sync_mode,
+                             weight_quant=self.weight_quant)
         all_ms = sorted(set(Ms) | set(extra_ms))
         for site in self.table.sites:
             for M in all_ms:

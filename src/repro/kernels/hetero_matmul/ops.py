@@ -44,13 +44,29 @@ def quantize_weight(w: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 def quantize_weight_int4(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     """W4A16 (the paper's deployment format): per-column symmetric int4,
-    two weights packed per int8 byte along K (rows 2r, 2r+1 -> lo, hi)."""
+    two weights packed per int8 byte along K (rows 2r, 2r+1 -> lo, hi).
+
+    Odd K is zero-padded to K+1 before packing (the pad row quantizes to
+    code 0, so dequant of the padded row is exactly zero); callers that
+    need the logical K back pass it to :func:`dequant_int4_ref`.
+
+    The int4 code range is asymmetric ([-8, 7]): when a column's
+    max-magnitude entry is negative and no positive entry would clip at
+    the wider step, amax/8 is the better scale — it maps the extreme to
+    the -8 code exactly instead of clipping it at -7 with amax/7.
+    """
+    w = w.astype(jnp.float32)
     K, N = w.shape
-    assert K % 2 == 0
-    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
-    scale = jnp.where(amax > 0, amax / 7.0, 1.0)
-    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
-                 -7, 7).astype(jnp.int8)
+    if K % 2:
+        w = jnp.concatenate([w, jnp.zeros((1, N), jnp.float32)], axis=0)
+    pos = jnp.max(jnp.maximum(w, 0.0), axis=0)
+    neg = jnp.max(jnp.maximum(-w, 0.0), axis=0)
+    amax = jnp.maximum(pos, neg)
+    # amax/8 is usable iff the largest positive still rounds inside +7,
+    # i.e. pos/(amax/8) < 7.5  <=>  pos < 0.9375 * amax (== neg here).
+    scale = jnp.where(pos < 0.9375 * neg, amax / 8.0, amax / 7.0)
+    scale = jnp.where(amax > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(w / scale[None, :]), -8, 7).astype(jnp.int8)
     lo = q[0::2] & 0x0F
     hi = q[1::2] & 0x0F
     packed = (lo | (hi << 4)).astype(jnp.int8)
@@ -67,10 +83,14 @@ def mxu_q4_matmul(x: jax.Array, wq4: jax.Array, scale: jax.Array, *,
     return y.reshape(*lead, wq4.shape[-1])
 
 
-def dequant_int4_ref(wq4: jax.Array, scale: jax.Array) -> jax.Array:
-    """Unpack oracle for tests."""
+def dequant_int4_ref(wq4: jax.Array, scale: jax.Array,
+                     k: int | None = None) -> jax.Array:
+    """Unpack oracle for tests. ``k`` recovers the logical contraction dim
+    when the original K was odd (the packer zero-pads to even)."""
     lo = (jnp.left_shift(wq4, 4) >> 4).astype(jnp.float32)
     hi = (wq4 >> 4).astype(jnp.float32)
     K2, N = wq4.shape
     q = jnp.stack([lo, hi], axis=1).reshape(2 * K2, N)
+    if k is not None:
+        q = q[:k]
     return q * scale[None, :]

@@ -30,6 +30,11 @@ Paged mode fuses the engine into the serving path
                     suffix (pair with --shared-prefix to shape the
                     workload; --decode-width < --requests staggers closes
                     so later admissions actually hit)
+  --weight-quant Q  serve quantized weights (int8 | w4a16): matmul sites
+                    carry int8/packed-int4 codes + per-channel scales and
+                    dispatch the in-VMEM-dequant MXU kernels (models/quant)
+  --kv-quant int8   int8 paged KV pool: quantize-on-scatter with per-slot
+                    bf16 scales — equal pool memory holds ~2x the tokens
   --stats           print the scheduler's unified stats() counter dict
 
 Batched serving always runs through the async ingress
@@ -109,6 +114,15 @@ def main(argv=None):
                     dest="shared_prefix",
                     help="give every request the same LEN-token system "
                          "prompt prefix (the prefix-cache workload shape)")
+    ap.add_argument("--weight-quant", default=None, dest="weight_quant",
+                    choices=["int8", "w4a16"],
+                    help="serve quantized weights: int8 or packed-int4 "
+                         "(W4A16) codes with per-output-channel scales "
+                         "(paged mode)")
+    ap.add_argument("--kv-quant", default=None, dest="kv_quant",
+                    choices=["int8"],
+                    help="quantize the paged KV pool to int8 codes with "
+                         "per-token-slot scales (paged mode)")
     ap.add_argument("--stats", action="store_true",
                     help="print the scheduler's stats() counter dict")
     ap.add_argument("--open-loop", action="store_true", dest="open_loop",
@@ -141,11 +155,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if (args.sync == "device" or args.engine_mode or args.eos_id is not None
             or args.mixed_batch or args.spec_k is not None
-            or args.prefix_cache) \
+            or args.prefix_cache or args.weight_quant or args.kv_quant) \
             and not (args.batched and args.paged):
         ap.error("--sync device / --engine-mode / --eos-id / --mixed-batch "
-                 "/ --spec-k / --prefix-cache apply to the paged batcher: "
-                 "add --batched --paged")
+                 "/ --spec-k / --prefix-cache / --weight-quant / --kv-quant "
+                 "apply to the paged batcher: add --batched --paged")
     if args.max_prefill_chunk is not None and not args.mixed_batch:
         ap.error("--max-prefill-chunk applies to --mixed-batch")
     if args.spec_draft is not None and args.spec_k is None:
@@ -190,7 +204,9 @@ def main(argv=None):
                               eos_id=args.eos_id,
                               mixed_batch=args.mixed_batch,
                               max_prefill_chunk_per_step=args.max_prefill_chunk,
-                              spec=spec, prefix_cache=args.prefix_cache)
+                              spec=spec, prefix_cache=args.prefix_cache,
+                              weight_quant=args.weight_quant,
+                              kv_quant=args.kv_quant)
             label = (f"paged (bs={args.block_size}, "
                      f"blocks={num_blocks}, W={args.decode_width}, "
                      f"sync={args.sync}"
@@ -200,6 +216,9 @@ def main(argv=None):
                         else "")
                      + (", mixed" if args.mixed_batch else "")
                      + (", prefix-cache" if args.prefix_cache else "")
+                     + (f", weights={args.weight_quant}"
+                        if args.weight_quant else "")
+                     + (f", kv={args.kv_quant}" if args.kv_quant else "")
                      + (f", spec k={args.spec_k} "
                         f"draft={args.spec_draft or 'self'}"
                         if spec else "") + ")")

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.partition import matmul_any
+
 NEG_INF = -1e30
 
 
@@ -178,8 +180,7 @@ def _qkv_rope(p: dict, x: jax.Array, cfg, positions: jax.Array, hetero_ctx):
     attention paths so their numerics are identical by construction."""
     B, S, _ = x.shape
     hd = cfg.head_dim
-    mm = hetero_ctx.matmul if hetero_ctx is not None else (
-        lambda a, b, name=None: a @ b)
+    mm = hetero_ctx.matmul if hetero_ctx is not None else matmul_any
     q = mm(x, p["wq"], name="wq").reshape(B, S, cfg.n_heads, hd)
     k = mm(x, p["wk"], name="wk").reshape(B, S, cfg.n_kv_heads, hd)
     v = mm(x, p["wv"], name="wv").reshape(B, S, cfg.n_kv_heads, hd)
@@ -244,11 +245,38 @@ def attention(
     return out, new_kv
 
 
+def quantize_kv_slot(x: jax.Array, scale_dtype=jnp.bfloat16
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Per-token-slot symmetric int8 KV quantization. x: [T, Hkv, D] ->
+    (codes int8 [T, Hkv, D], scale [T]).
+
+    One scalar scale per (token, tensor) slot, ROUNDED TO THE STORAGE DTYPE
+    BEFORE the codes are computed: codes quantize against the value the
+    gather will actually multiply by, so quantize-on-scatter composes
+    bit-exactly across any chunking of the same token stream (prefill vs
+    decode vs mixed vs verify writes). An all-zero slot stores scale 0 —
+    it dequantizes to exactly 0, like an unwritten fp pool slot.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1))   # [T]
+    s_stored = jnp.where(amax > 0, amax / 127.0, 0.0).astype(scale_dtype)
+    denom = jnp.where(s_stored == 0, 1.0, s_stored.astype(jnp.float32))
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / denom[..., None, None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, s_stored
+
+
+def dequant_kv_ref(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """Reference expansion of an int8 KV pool tensor (codes [..., T, Hkv, D]
+    x scale [..., T]) — the conformance oracle and the gather-side math."""
+    return (codes.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None, None]).astype(dtype)
+
+
 def paged_attention(
     p: dict, x: jax.Array, cfg, *,
     positions: jax.Array,           # [S] or [B, S] absolute token positions
-    pool_k: jax.Array,              # [NB, BS, Hkv, D] shared page pool (layer)
-    pool_v: jax.Array,
+    pool: dict,                     # per-layer pool: {"k","v": [NB,BS,Hkv,D]}
+    #                                 (+ "k_scale","v_scale": [NB,BS] if int8)
     block_table: jax.Array,         # [B, NBmax] int32 pool block ids (0=null)
     unroll: bool = False,
     hetero_ctx=None,
@@ -263,35 +291,61 @@ def paged_attention(
     mask handles stale pool contents and null-block padding exactly like
     the dense path masks unwritten cache slots.
 
-    Returns (out, {"k","v"}: updated pool tensors).
+    An int8 pool (``k_scale``/``v_scale`` present) quantizes on scatter —
+    per-slot codes + one scale scalar per (slot, tensor) — and dequantizes
+    inside the gather, so equal pool memory holds ~2x the blocks while the
+    attention math itself stays in compute precision.
+
+    Returns (out, updated per-layer pool dict with the same keys).
     """
     B, S, _ = x.shape
     hd = cfg.head_dim
-    NB, BS, Hkv, D = pool_k.shape
+    NB, BS, Hkv, D = pool["k"].shape
+    quant = "k_scale" in pool
     q, k, v, mm = _qkv_rope(p, x, cfg, positions, hetero_ctx)
 
     pos = (positions if positions.ndim == 2
            else jnp.broadcast_to(positions[None, :], (B, S))).astype(jnp.int32)
     blk = jnp.take_along_axis(block_table, pos // BS, axis=1)     # [B, S]
     flat_idx = (blk * BS + pos % BS).reshape(-1)                  # [B*S]
-    fk = pool_k.reshape(NB * BS, Hkv, D)
-    fv = pool_v.reshape(NB * BS, Hkv, D)
-    fk = fk.at[flat_idx].set(k.reshape(B * S, Hkv, D).astype(fk.dtype))
-    fv = fv.at[flat_idx].set(v.reshape(B * S, Hkv, D).astype(fv.dtype))
-    new_pool_k = fk.reshape(NB, BS, Hkv, D)
-    new_pool_v = fv.reshape(NB, BS, Hkv, D)
+    fk = pool["k"].reshape(NB * BS, Hkv, D)
+    fv = pool["v"].reshape(NB * BS, Hkv, D)
+    new_pool = {}
+    if quant:
+        k_codes, k_sc = quantize_kv_slot(k.reshape(B * S, Hkv, D),
+                                         pool["k_scale"].dtype)
+        v_codes, v_sc = quantize_kv_slot(v.reshape(B * S, Hkv, D),
+                                         pool["v_scale"].dtype)
+        fk = fk.at[flat_idx].set(k_codes)
+        fv = fv.at[flat_idx].set(v_codes)
+        new_pool["k_scale"] = pool["k_scale"].reshape(
+            NB * BS).at[flat_idx].set(k_sc).reshape(NB, BS)
+        new_pool["v_scale"] = pool["v_scale"].reshape(
+            NB * BS).at[flat_idx].set(v_sc).reshape(NB, BS)
+    else:
+        fk = fk.at[flat_idx].set(k.reshape(B * S, Hkv, D).astype(fk.dtype))
+        fv = fv.at[flat_idx].set(v.reshape(B * S, Hkv, D).astype(fv.dtype))
+    new_pool["k"] = fk.reshape(NB, BS, Hkv, D)
+    new_pool["v"] = fv.reshape(NB, BS, Hkv, D)
 
     NBmax = block_table.shape[1]
-    ck = jnp.take(new_pool_k, block_table, axis=0).reshape(
+    ck = jnp.take(new_pool["k"], block_table, axis=0).reshape(
         B, NBmax * BS, Hkv, D)
-    cv = jnp.take(new_pool_v, block_table, axis=0).reshape(
+    cv = jnp.take(new_pool["v"], block_table, axis=0).reshape(
         B, NBmax * BS, Hkv, D)
+    if quant:
+        ck_s = jnp.take(new_pool["k_scale"], block_table, axis=0).reshape(
+            B, NBmax * BS)
+        cv_s = jnp.take(new_pool["v_scale"], block_table, axis=0).reshape(
+            B, NBmax * BS)
+        ck = dequant_kv_ref(ck, ck_s, q.dtype)
+        cv = dequant_kv_ref(cv, cv_s, q.dtype)
     kv_pos = jnp.arange(NBmax * BS, dtype=jnp.int32)
     o = blockwise_attention(q, ck, cv, q_pos=pos, kv_pos=kv_pos,
                             causal=True, block_k=cfg.attn_block_k,
                             unroll=unroll)
     out = mm(o.reshape(B, S, cfg.n_heads * hd), p["wo"], name="wo")
-    return out, {"k": new_pool_k, "v": new_pool_v}
+    return out, new_pool
 
 
 # ---------------------------------------------------------------------- ffn --
@@ -308,8 +362,7 @@ def init_swiglu(key, d: int, d_ff: int, dtype) -> dict:
 
 
 def swiglu(p: dict, x: jax.Array, hetero_ctx=None) -> jax.Array:
-    mm = hetero_ctx.matmul if hetero_ctx is not None else (
-        lambda a, b, name=None: a @ b)
+    mm = hetero_ctx.matmul if hetero_ctx is not None else matmul_any
     g = mm(x, p["w_gate"], name="w_gate")
     u = mm(x, p["w_up"], name="w_up")
     return mm(jax.nn.silu(g) * u, p["w_down"], name="w_down")
@@ -345,7 +398,7 @@ def chunked_ce_loss(emb_out: jax.Array, h: jax.Array, targets: jax.Array,
     @jax.checkpoint
     def step(carry, xs):
         hi, ti = xs
-        logits = logits_constraint((hi @ emb_out).astype(jnp.float32))
+        logits = logits_constraint(matmul_any(hi, emb_out).astype(jnp.float32))
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
         return carry + jnp.sum(lse - gold)

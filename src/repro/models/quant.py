@@ -1,0 +1,89 @@
+"""Weight quantization for serving: fp params -> QuantWeight-carrying params.
+
+``quantize_params`` rewrites the dense-transformer matmul sites (attention
+q/k/v/o, SwiGLU gate/up/down, and the untied LM head) into
+:class:`repro.core.partition.QuantWeight` containers — int8 or packed-int4
+codes plus per-output-channel scales — while embeddings and norms stay fp.
+Because QuantWeight is a pytree node whose arrays keep the stacked ``[L,...]``
+layer axis, the quantized params thread through every existing inference
+path (``lax.scan`` layer stacks, jit, donation) unchanged; the HeteroCtx
+dispatches the in-VMEM-dequant MXU kernels at quantized sites and the
+plan-free fallback dequantizes before the matmul, so any execution schedule
+sees the SAME dequantized weight values (token-identity across arms).
+
+Tied-embedding models (e.g. smollm-135m) keep their LM head fp: the head is
+the embedding transpose, and quantizing it would also perturb the input
+embeddings — a different (activation) quantization problem than the paper's
+weight-only W4A16 stance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import QuantWeight
+from repro.kernels.hetero_matmul.ops import (quantize_weight,
+                                             quantize_weight_int4)
+
+WEIGHT_FORMATS = ("int8", "w4a16")
+
+# the partitionable matmul sites quantization covers, by param subtree
+_ATTN_SITES = ("wq", "wk", "wv", "wo")
+_FFN_SITES = ("w_gate", "w_up", "w_down")
+
+
+def _quantize_leaf(w: jax.Array, fmt: str) -> QuantWeight:
+    """Quantize one (possibly layer-stacked) weight: [K, N] or [L, K, N]."""
+    k = w.shape[-2]
+    qfn = quantize_weight if fmt == "int8" else quantize_weight_int4
+    if w.ndim == 3:
+        wq, scale = jax.vmap(qfn)(w)
+    else:
+        wq, scale = qfn(w)
+    return QuantWeight(wq, scale, fmt, k)
+
+
+def quantize_params(params: dict, cfg, fmt: str) -> dict:
+    """Return a copy of ``params`` with every dense matmul site quantized to
+    ``fmt`` ('int8' or 'w4a16'). Embeddings, norms, and a tied LM head stay
+    in the original dtype."""
+    if fmt not in WEIGHT_FORMATS:
+        raise ValueError(f"unsupported weight quant format {fmt!r}; "
+                         f"expected one of {WEIGHT_FORMATS}")
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            f"weight quantization covers the dense transformer family only "
+            f"(got {cfg.family!r})")
+    if cfg.moe:
+        raise NotImplementedError("MoE expert weights are not quantized yet")
+
+    out = dict(params)
+    layers = dict(params["layers"])
+    attn = dict(layers["attn"])
+    for site in _ATTN_SITES:
+        attn[site] = _quantize_leaf(attn[site], fmt)
+    layers["attn"] = attn
+    ffn = dict(layers["ffn"])
+    for site in _FFN_SITES:
+        ffn[site] = _quantize_leaf(ffn[site], fmt)
+    layers["ffn"] = ffn
+    out["layers"] = layers
+    if "head" in params:          # untied head is a partitionable site too
+        out["head"] = _quantize_leaf(params["head"], fmt)
+    return out
+
+
+def dequantize_params(params: dict) -> dict:
+    """Expand every QuantWeight back to an fp array — the dequantize-then-fp
+    reference arm the conformance tier compares quantized execution against."""
+    return jax.tree.map(
+        lambda w: w.dequant(jnp.float32) if isinstance(w, QuantWeight) else w,
+        params, is_leaf=lambda w: isinstance(w, QuantWeight))
+
+
+def score_nll(model, params, tokens: jax.Array) -> float:
+    """Mean next-token NLL (nats/token) of a fixed token set, teacher-forced
+    — the mini-eval behind the perplexity-drift regression test and
+    benchmarks/bench_quant.py. tokens: [B, S+1] int32."""
+    _, metrics = model.loss(params, tokens[:, :-1], tokens[:, 1:])
+    return float(metrics["ce"])

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.partition import matmul_any
 from repro.distributed.sharding import hidden_constraint
 
 from .layers import (attention, chunked_ce_loss, init_attention, init_swiglu,
@@ -55,8 +56,7 @@ def _layer(lp, x, cfg, *, positions, kv=None, cache_index=None, unroll=False,
     if paged is not None:
         attn_out, new_kv = paged_attention(
             lp["attn"], h, cfg, positions=positions,
-            pool_k=paged["k"], pool_v=paged["v"],
-            block_table=paged["block_table"],
+            pool=paged["pool"], block_table=paged["block_table"],
             unroll=unroll, hetero_ctx=hetero_ctx)
     else:
         attn_out, new_kv = attention(lp["attn"], h, cfg, positions=positions,
@@ -140,7 +140,7 @@ def _head_logits(params, x, cfg, hetero_ctx=None):
     if hetero_ctx is not None:
         y = hetero_ctx.matmul(x, _head_matrix(params, cfg), name="head")
     else:
-        y = x @ _head_matrix(params, cfg)
+        y = matmul_any(x, _head_matrix(params, cfg))
     return y.astype(jnp.float32)
 
 
@@ -211,40 +211,57 @@ def prefill_slot(params, cache, tokens, slot, start, cfg, *, chunk: int):
 # ------------------------------------------------------------ paged cache --
 
 def init_paged_cache(cfg, *, num_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16) -> dict:
+                     dtype=jnp.bfloat16, kv_quant: Optional[str] = None
+                     ) -> dict:
     """Shared KV page pool: ``[L, num_blocks, block_size, Hkv, D]`` per
-    tensor. Block 0 is the null block (see serving/paged_cache.py)."""
+    tensor. Block 0 is the null block (see serving/paged_cache.py).
+
+    ``kv_quant='int8'`` stores int8 codes plus one scale scalar per
+    (layer, slot, tensor) — ``k_scale``/``v_scale`` ``[L, NB, BS]`` in
+    bfloat16, quantized-on-scatter and dequantized in the attention gather
+    (models/layers.py::paged_attention). Zero scales mark unwritten slots.
+    """
     shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
              cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kv_quant is None:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kv_quant != "int8":
+        raise ValueError(f"unsupported kv_quant {kv_quant!r}")
+    sshape = shape[:3]
+    return {"k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(sshape, jnp.bfloat16),
+            "v_scale": jnp.zeros(sshape, jnp.bfloat16)}
 
 
 def _run_layers_paged(params, x, cfg, *, positions, pool, block_table,
                       unroll=False, hetero_ctx=None):
     """Like ``_run_layers`` but attention reads/writes the paged pool;
-    scans over (layer params, per-layer pages), returns the updated pool."""
+    scans over (layer params, per-layer pages) — the pool is a pytree of
+    ``[L, ...]`` leaves (K/V tensors plus the int8 pool's scale planes), so
+    the scan slices every leaf per layer. Returns the updated pool."""
     if unroll:
-        new_ks, new_vs = [], []
+        new_pools = []
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["layers"])
-            x, nkv, _ = _layer(lp, x, cfg, positions=positions, unroll=True,
+            pl = jax.tree.map(lambda a: a[i], pool)
+            x, npl, _ = _layer(lp, x, cfg, positions=positions, unroll=True,
                                hetero_ctx=hetero_ctx,
-                               paged={"k": pool["k"][i], "v": pool["v"][i],
+                               paged={"pool": pl,
                                       "block_table": block_table})
-            new_ks.append(nkv["k"]); new_vs.append(nkv["v"])
-        return x, {"k": jnp.stack(new_ks), "v": jnp.stack(new_vs)}
+            new_pools.append(npl)
+        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *new_pools)
 
     def step(carry, xs):
-        lp, pk, pv = xs
-        x2, nkv, _ = _layer(lp, carry, cfg, positions=positions,
+        lp, pl = xs
+        x2, npl, _ = _layer(lp, carry, cfg, positions=positions,
                             hetero_ctx=hetero_ctx,
-                            paged={"k": pk, "v": pv,
+                            paged={"pool": pl,
                                    "block_table": block_table})
-        return x2, (nkv["k"], nkv["v"])
+        return x2, npl
 
-    x, (nk, nv) = jax.lax.scan(step, x,
-                               (params["layers"], pool["k"], pool["v"]))
-    return x, {"k": nk, "v": nv}
+    x, new_pool = jax.lax.scan(step, x, (params["layers"], pool))
+    return x, new_pool
 
 
 def paged_prefill(params, tokens, pool, cfg, *, block_table, start_index=0,
@@ -331,35 +348,35 @@ def mixed_step(params, decode_tokens, prefill_tokens, pool, cfg, *,
     dec_pos = decode_lengths[:, None].astype(jnp.int32)
     pre_pos = prefill_start + jnp.arange(C, dtype=jnp.int32)
 
-    def body(lp, xd, xp, pk, pv):
+    def body(lp, xd, xp, pl):
         # decode lanes first (flexible path), prefill chunk second
         # (solver-planned path); order is arbitrary — disjoint block tables
-        xd2, nkv_d, _ = _layer(lp, xd, cfg, positions=dec_pos, unroll=unroll,
-                               paged={"k": pk, "v": pv,
-                                      "block_table": decode_tables})
-        xp2, nkv_p, _ = _layer(lp, xp, cfg, positions=pre_pos, unroll=unroll,
-                               hetero_ctx=hetero_ctx,
-                               paged={"k": nkv_d["k"], "v": nkv_d["v"],
-                                      "block_table": prefill_table})
-        return xd2, xp2, nkv_p["k"], nkv_p["v"]
+        xd2, npd, _ = _layer(lp, xd, cfg, positions=dec_pos, unroll=unroll,
+                             paged={"pool": pl,
+                                    "block_table": decode_tables})
+        xp2, npp, _ = _layer(lp, xp, cfg, positions=pre_pos, unroll=unroll,
+                             hetero_ctx=hetero_ctx,
+                             paged={"pool": npd,
+                                    "block_table": prefill_table})
+        return xd2, xp2, npp
 
     if unroll:
-        new_ks, new_vs = [], []
+        new_pools = []
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["layers"])
-            xd, xp, nk, nv = body(lp, xd, xp, pool["k"][i], pool["v"][i])
-            new_ks.append(nk); new_vs.append(nv)
-        pool = {"k": jnp.stack(new_ks), "v": jnp.stack(new_vs)}
+            pl = jax.tree.map(lambda a: a[i], pool)
+            xd, xp, npl = body(lp, xd, xp, pl)
+            new_pools.append(npl)
+        pool = jax.tree.map(lambda *ls: jnp.stack(ls), *new_pools)
     else:
         def step(carry, xs):
             xd, xp = carry
-            lp, pk, pv = xs
-            xd2, xp2, nk, nv = body(lp, xd, xp, pk, pv)
-            return (xd2, xp2), (nk, nv)
+            lp, pl = xs
+            xd2, xp2, npl = body(lp, xd, xp, pl)
+            return (xd2, xp2), npl
 
-        (xd, xp), (nk, nv) = jax.lax.scan(
-            step, (xd, xp), (params["layers"], pool["k"], pool["v"]))
-        pool = {"k": nk, "v": nv}
+        (xd, xp), pool = jax.lax.scan(
+            step, (xd, xp), (params["layers"], pool))
 
     xd = rms_norm(xd, params["final_norm"], cfg.norm_eps)
     dec_logits = _head_logits(params, xd, cfg)     # flexible-path head

@@ -210,7 +210,9 @@ def _cow_copy(pool: dict, src, dst) -> dict:
     (the copy-on-write primitive). src/dst are traced scalars, so every
     (src, dst) pair reuses one compiled graph."""
     out = dict(pool)
-    for key in ("k", "v"):
+    for key in pool:        # k/v pages AND (int8 pools) their scale planes —
+        # every pool tensor keeps blocks on axis 1 ([L, NB, ...]), so one
+        # take/update pair copies codes and scales alike
         page = jnp.take(pool[key], src[None], axis=1)      # [L, 1, bs, H, D]
         out[key] = jax.lax.dynamic_update_slice_in_dim(
             pool[key], page, dst, axis=1)
@@ -236,16 +238,18 @@ class PagedKVCache:
 
     def __init__(self, cfg, *, num_blocks: int, block_size: int = 32,
                  max_blocks_per_seq: int | None = None, dtype=jnp.bfloat16,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, kv_quant: str | None = None):
         from repro.models import transformer
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.kv_quant = kv_quant
         self.max_blocks_per_seq = (max_blocks_per_seq
                                    if max_blocks_per_seq is not None
                                    else num_blocks - 1)
         self.pool = transformer.init_paged_cache(
-            cfg, num_blocks=num_blocks, block_size=block_size, dtype=dtype)
+            cfg, num_blocks=num_blocks, block_size=block_size, dtype=dtype,
+            kv_quant=kv_quant)
         self.allocator = BlockAllocator(num_blocks)
         self._reserved_unheld = 0      # promised at admission, not yet alloc'd
         self.prefix_cache = prefix_cache
@@ -497,6 +501,12 @@ class PagedKVCache:
         """Total token capacity of the pool (for equal-memory comparisons);
         the null block is real memory, so it counts."""
         return self.num_blocks * self.block_size
+
+    def pool_bytes(self) -> int:
+        """Device bytes held by the pool tensors — the equal-memory axis of
+        the int8-KV capacity comparison (benchmarks/bench_quant.py): an int8
+        pool stores ~2x the token slots of a bf16 pool of the same size."""
+        return sum(int(a.size) * a.dtype.itemsize for a in self.pool.values())
 
     def utilization(self) -> float:
         held = (self.num_blocks - 1 - self.allocator.n_free

@@ -108,12 +108,17 @@ def _validate_submit(req: Request, live_rids) -> None:
 class ContinuousBatcher:
     def __init__(self, cfg, params=None, *, max_batch: int = 4,
                  max_len: int = 512, buckets=(64, 128, 256),
-                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
+                 weight_quant: str | None = None):
         assert cfg.moe is None or True
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
+        self.weight_quant = weight_quant
+        if weight_quant is not None:
+            from repro.models.quant import quantize_params
+            self.params = quantize_params(self.params, cfg, weight_quant)
         self.B, self.S = max_batch, max_len
         self.buckets = tuple(sorted(buckets))
         self.sampler = sampler
@@ -308,6 +313,19 @@ class PagedBatcher:
     bit-identical to the cold path (cached KV was computed from the same
     tokens at the same positions). Eviction is LRU over refcount-0 cached
     blocks, so retention never reduces admissible capacity.
+
+    ``weight_quant`` in {'int8', 'w4a16'} serves QUANTIZED weights: params
+    are rewritten to QuantWeight containers at construction, every matmul
+    site (prefill chunk, decode window, mixed step, verify) dispatches the
+    in-VMEM-dequant MXU kernels under a HeteroCtx or the dequantize-then-
+    matmul fallback without one — the same dequantized values either way,
+    so engine modes and sync arms remain token-identical. ``kv_quant='int8'``
+    stores the paged pool as int8 codes with per-token-slot bf16 scales
+    (quantize-on-scatter, dequant-on-gather): equal pool memory holds ~2x
+    the token blocks, which is the serving-capacity lever on a
+    capacity-bound SoC. Both compose with windows, mixed batching,
+    speculation (draft caches stay fp), and the prefix cache (cached blocks
+    retire/share/CoW as int8 codes + scales).
     """
 
     def __init__(self, cfg, params=None, *, num_blocks: int = 65,
@@ -320,7 +338,9 @@ class PagedBatcher:
                  max_prefill_chunk_per_step: int | None = None,
                  spec: SpecConfig | int | None = None,
                  spec_draft_params=None, interpret: bool = True,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 weight_quant: str | None = None,
+                 kv_quant: str | None = None):
         if sync not in ("host", "device"):
             raise ValueError(f"sync must be 'host' or 'device', got {sync!r}")
         if window < 1:
@@ -337,6 +357,13 @@ class PagedBatcher:
                 and max_prefill_chunk_per_step < 1:
             raise ValueError("max_prefill_chunk_per_step must be >= 1, got "
                              f"{max_prefill_chunk_per_step}")
+        from repro.models.quant import WEIGHT_FORMATS, quantize_params
+        if weight_quant is not None and weight_quant not in WEIGHT_FORMATS:
+            raise ValueError(f"weight_quant must be one of {WEIGHT_FORMATS} "
+                             f"(or None), got {weight_quant!r}")
+        if kv_quant not in (None, "int8"):
+            raise ValueError(f"kv_quant must be 'int8' or None, "
+                             f"got {kv_quant!r}")
         self.cfg = cfg
         self.model = build_model(cfg)
         if self.model.paged_decode_step is None:
@@ -344,14 +371,25 @@ class PagedBatcher:
                              "attention-family model")
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
+        self.weight_quant = weight_quant
+        self.kv_quant = kv_quant
+        if weight_quant is not None:
+            # fp params in, QuantWeight-carrying params out: every matmul
+            # site downstream (prefill chunks, decode windows, mixed steps,
+            # verify) sees the quantized weights — dequantized identically
+            # whether the HeteroCtx MXU kernels or the plan-free fallback
+            # runs them, so engine modes stay token-identical
+            self.params = quantize_params(self.params, cfg, weight_quant)
+        # the fp activation dtype: pool storage when KV is unquantized, and
+        # always the draft-lane cache dtype (draft caches stay fp)
+        fp_dtype = (cache_dtype if cache_dtype is not None
+                    else jnp.dtype(cfg.compute_dtype))
         self.block_size = block_size
         self.prefix_cache = prefix_cache
         self.kv = PagedKVCache(
             cfg, num_blocks=num_blocks, block_size=block_size,
             max_blocks_per_seq=max_blocks_per_seq,
-            dtype=(cache_dtype if cache_dtype is not None
-                   else jnp.dtype(cfg.compute_dtype)),
-            prefix_cache=prefix_cache)
+            dtype=fp_dtype, prefix_cache=prefix_cache, kv_quant=kv_quant)
         self.W = decode_width
         self.buckets = tuple(sorted(buckets))
         self.sampler = sampler
@@ -400,6 +438,9 @@ class PagedBatcher:
                 extra_ms=(tuple(range(block_size, min(self.buckets),
                                       block_size))
                           if prefix_cache else ()),
+                # quantized weight-stream bytes change the roofline: the
+                # solver re-plans memory-bound (decode-width) shapes
+                weight_quant=weight_quant,
                 interpret=interpret)
         else:
             self.ctx = None
@@ -435,7 +476,7 @@ class PagedBatcher:
                 draft_cfg, spec_draft_params, lanes=decode_width,
                 max_len=self.kv.max_blocks_per_seq * block_size + spec.k + 1,
                 buckets=self.buckets, sync=sync,
-                dtype=self.kv.pool["k"].dtype)
+                dtype=fp_dtype)       # draft caches stay fp under kv_quant
             vctx = (self.ctx.for_verify(spec.k, decode_width)
                     if self.ctx is not None else None)
             self._verify = jax.jit(partial(self.model.paged_verify,

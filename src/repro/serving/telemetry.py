@@ -158,7 +158,11 @@ class RequestTrace:
     def queue_delay(self) -> Optional[float]:
         if self.admit_t is None:
             return None
-        return self.admit_t - self.enqueue_t
+        # clamp: an admission in the same tick the arrival was released can
+        # stamp admit_t one float ulp below the scheduled enqueue_t (the
+        # clock reaches the same instant via a different summation order);
+        # queueing delay is non-negative by definition
+        return max(0.0, self.admit_t - self.enqueue_t)
 
     @property
     def tpot(self) -> Optional[float]:

@@ -14,6 +14,20 @@ import pytest  # noqa: E402
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_compiled_cache_per_module():
+    """Drop jit/pjit executable caches at module boundaries. Every compiled
+    XLA:CPU executable pins mmapped code pages for the life of the process;
+    a full single-process tier-1 run accumulates enough of them to exhaust
+    the kernel's vm.max_map_count ceiling (65530 on stock Linux), at which
+    point the NEXT backend_compile mmap fails and jaxlib segfaults. Clearing
+    per module caps live executables at one module's worth (~a third of the
+    ceiling) at the cost of cross-module recompiles of the shared
+    smoke_model graphs."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def smoke_model():
     """The float32 llama3 smoke model the serving tests share: (cfg, model,
@@ -53,7 +67,16 @@ CONFORMANCE_CASES = (
     KernelCase("ragged_m", 77, 128, 128),        # ragged token count
     KernelCase("odd_k", 128, 97, 128),           # genuinely odd K
     KernelCase("ragged_both", 53, 96, 256),      # ragged M and misaligned K
+    KernelCase("quant_edges", 64, 95, 192),      # ragged M, odd K, ragged N —
+    #                                   the shape family quantized serving
+    #                                   routes through per-channel scales
 )
+
+# quantized serving entry points the conformance tier must cover
+# (test_kernel_conformance.py holds each against a dequantize-then-fp
+# reference; the meta-test pins this list so the grid can only grow)
+QUANT_SERVING_CHECKS = ("paged_prefill", "paged_decode_step", "mixed_step",
+                        "paged_verify", "int8_pool_gather")
 
 # activation dtypes the serving/engine paths actually run; per-kernel
 # tolerance reflects the output-dtype rounding of the kernel contract

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import pytest
 
 from conftest import (CONFORMANCE_CASES, CONFORMANCE_DTYPES, DTYPE_TOL,
-                      pad_to, rel_err)
+                      QUANT_SERVING_CHECKS, pad_to, rel_err)
 
 RNG = jax.random.PRNGKey(0)
 ALIGN = 128
@@ -183,3 +183,205 @@ def test_int4_quantization_error_bound():
     w = jax.random.normal(k2, (256, 128), jnp.float32)
     wq4, s = quantize_weight_int4(w)
     assert rel_err(x @ dequant_int4_ref(wq4, s), x @ w) < 0.15
+
+
+def _unpack_int4(wq4):
+    lo = (jnp.left_shift(wq4, 4) >> 4).astype(jnp.int32)
+    hi = (wq4 >> 4).astype(jnp.int32)
+    k2, n = wq4.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
+
+
+@pytest.mark.tier1
+def test_int4_roundtrip_exact_codes_odd_k():
+    """Odd-K int4 regression: values that are exact multiples of the
+    asymmetric-range scale must round-trip to their exact codes, including
+    the -8 code the [-8, 7] range reserves, with the padded half-row
+    invisible to the dequant slice."""
+    from repro.kernels.hetero_matmul.ops import (dequant_int4_ref,
+                                                 quantize_weight_int4)
+    w = 0.5 * jnp.array([[-8.0], [-4.0], [-6.0], [-2.0], [7.0]])  # K=5 odd
+    wq4, s = quantize_weight_int4(w)
+    assert wq4.shape == (3, 1)          # ceil(5/2) packed rows
+    assert float(s[0]) == 0.5           # neg-heavy column: scale = amax/8
+    codes = _unpack_int4(wq4)[:5, 0]
+    assert codes.tolist() == [-8, -4, -6, -2, 7]
+    assert jnp.array_equal(dequant_int4_ref(wq4, s, 5), w)
+
+
+@pytest.mark.tier1
+def test_int4_all_negative_channel_roundtrip():
+    """All-negative channel regression: amax sits on the negative side, so
+    the asymmetric scale amax/8 makes every exact multiple representable —
+    the pre-fix symmetric amax/7 scale could not round-trip the minimum."""
+    from repro.kernels.hetero_matmul.ops import (dequant_int4_ref,
+                                                 quantize_weight_int4)
+    w = -0.25 * jnp.arange(1.0, 9.0)[:, None]          # K=8, all negative
+    wq4, s = quantize_weight_int4(w)
+    assert float(s[0]) == 0.25                         # scale = 2.0 / 8
+    assert _unpack_int4(wq4)[:, 0].tolist() == [-1, -2, -3, -4,
+                                                -5, -6, -7, -8]
+    assert jnp.array_equal(dequant_int4_ref(wq4, s, 8), w)
+
+
+@pytest.mark.tier1
+def test_quant_zero_channel_edge():
+    """An all-zero output channel must quantize to scale-fallback codes of
+    exactly 0 (no 0/0), in both weight formats."""
+    from repro.kernels.hetero_matmul.ops import (dequant_int4_ref,
+                                                 quantize_weight,
+                                                 quantize_weight_int4)
+    w = jnp.concatenate([jnp.zeros((6, 1)),
+                         jax.random.normal(RNG, (6, 1))], axis=1)
+    wq, s = quantize_weight(w)
+    assert float(s[0]) == 1.0 and not wq[:, 0].any()
+    wq4, s4 = quantize_weight_int4(w)
+    assert float(s4[0]) == 1.0
+    assert not dequant_int4_ref(wq4, s4, 6)[:, 0].any()
+
+
+@pytest.mark.tier1
+def test_int8_max_magnitude_channel_roundtrip():
+    """A channel of exact scale multiples (amax hits the +/-127 rails)
+    round-trips losslessly through int8."""
+    from repro.kernels.hetero_matmul.ops import quantize_weight
+    w = 0.02 * jnp.array([[-127.0], [63.0], [-11.0], [127.0]])
+    wq, s = quantize_weight(w)
+    assert wq[:, 0].tolist() == [-127, 63, -11, 127]
+    assert jnp.allclose(wq * s, w, atol=1e-7)
+
+
+@pytest.mark.tier1
+def test_kv_slot_quantization_edges():
+    """int8 KV pool scalar quantization: a zero slot stores scale 0 (the
+    unwritten-slot marker) and dequantizes to exactly 0; a slot of exact
+    scale multiples round-trips losslessly."""
+    from repro.models.layers import dequant_kv_ref, quantize_kv_slot
+    zero = jnp.zeros((2, 3, 4))
+    codes, s = quantize_kv_slot(zero)
+    assert not codes.any() and not s.astype(jnp.float32).any()
+    assert not dequant_kv_ref(codes, s, jnp.float32).any()
+    x = 0.25 * jnp.array([[-127.0, 64.0], [3.0, 127.0]])[None]
+    codes, s = quantize_kv_slot(x)
+    assert float(s[0]) == 0.25          # exactly representable in bf16
+    assert jnp.array_equal(dequant_kv_ref(codes, s, jnp.float32), x)
+
+
+# ------------------------------------------- quantized serving entry points
+# Every serving entry point that can carry quantized weights, held against
+# its dequantize-then-fp reference: identical math (and thus tokens) via the
+# plan-free fallback, kernel-tolerance parity via the HeteroCtx MXU path.
+
+QUANT_FORMATS = ("int8", "w4a16")
+_ENTRY_POINTS = tuple(c for c in QUANT_SERVING_CHECKS
+                      if c != "int8_pool_gather")
+
+
+def _serving_entry(model, cfg, params, entry, ctx=None, kv_quant=None):
+    """Run one serving entry point on ragged shapes; returns its logits."""
+    B, S, NB, BS = 2, 9, 16, 8                      # ragged S (not a block
+    tok = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)   # multiple)
+    bt = jnp.array([[1, 2, 3, 0], [4, 5, 6, 0]], jnp.int32)
+    pool = model.init_paged_cache(num_blocks=NB, block_size=BS,
+                                  dtype=jnp.float32, kv_quant=kv_quant)
+    logits, pool = model.paged_prefill(params, tok, pool, block_table=bt,
+                                       start_index=0, hetero_ctx=ctx)
+    if entry == "paged_prefill":
+        return logits
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    if entry == "paged_decode_step":
+        lg, _ = model.paged_decode_step(params, nxt, pool,
+                                        block_tables=bt,
+                                        lengths=jnp.array([S, S]),
+                                        hetero_ctx=ctx)
+        return lg
+    if entry == "paged_verify":
+        vt = jnp.concatenate([nxt, (nxt + 1) % cfg.vocab_size], axis=1)
+        lg, _ = model.paged_verify(params, vt, pool,
+                                   block_table=bt,
+                                   start_index=jnp.array([S, S]),
+                                   hetero_ctx=ctx)
+        return lg
+    assert entry == "mixed_step"
+    chunk = jax.random.randint(jax.random.PRNGKey(5), (1, 5),
+                               0, cfg.vocab_size)   # ragged prefill chunk
+    pt = jnp.array([[7, 8, 0, 0]], jnp.int32)
+    dlg, plg, _ = model.mixed_step(params, nxt, chunk, pool,
+                                   decode_tables=bt,
+                                   decode_lengths=jnp.array([S, S]),
+                                   prefill_table=pt,
+                                   prefill_start=jnp.asarray(0, jnp.int32),
+                                   hetero_ctx=ctx)
+    return jnp.concatenate([dlg[:, -1], plg[:, -1]], axis=0)
+
+
+@pytest.fixture(scope="module")
+def quant_params(smoke_model):
+    """Per-format quantized + dequantized-reference params, and the
+    weight-quant-planned hetero ctx, shared across the entry-point grid."""
+    from repro.core.engine import build_hetero_ctx
+    from repro.models.quant import dequantize_params, quantize_params
+    cfg, model, params = smoke_model
+    out = {}
+    for fmt in QUANT_FORMATS:
+        qp = quantize_params(params, cfg, fmt)
+        out[fmt] = (qp, dequantize_params(qp),
+                    build_hetero_ctx(cfg, "hetero-tensor", weight_quant=fmt))
+    return out
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("fmt", QUANT_FORMATS)
+@pytest.mark.parametrize("entry", _ENTRY_POINTS)
+def test_quant_serving_entry_fallback_exact(entry, fmt, smoke_model,
+                                            quant_params):
+    """Plan-free (ctx=None) quantized execution must match the dequantize-
+    then-fp reference to fp rounding: both sides run literally the same
+    dequantized weight values."""
+    cfg, model, _ = smoke_model
+    qp, dq, _ = quant_params[fmt]
+    got = _serving_entry(model, cfg, qp, entry)
+    want = _serving_entry(model, cfg, dq, entry)
+    assert rel_err(got, want) < DTYPE_TOL["float32"]
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("fmt", QUANT_FORMATS)
+@pytest.mark.parametrize("entry", _ENTRY_POINTS)
+def test_quant_serving_entry_hetero_kernels(entry, fmt, smoke_model,
+                                            quant_params):
+    """The solver-planned path (quantized MXU kernels, in-VMEM dequant) must
+    agree with the dequantize-then-fp reference within kernel tolerance."""
+    cfg, model, _ = smoke_model
+    qp, dq, ctx = quant_params[fmt]
+    got = _serving_entry(model, cfg, qp, entry, ctx=ctx)
+    want = _serving_entry(model, cfg, dq, entry)
+    assert rel_err(got, want) < 1e-4
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("entry", _ENTRY_POINTS)
+def test_int8_pool_gather_conformance(entry, smoke_model):
+    """The int8 paged pool (quantize-on-scatter, dequant-on-gather) must
+    track the fp pool within the per-slot int8 rounding budget on every
+    entry point that reads the pool."""
+    cfg, model, params = smoke_model
+    want = _serving_entry(model, cfg, params, entry)
+    got = _serving_entry(model, cfg, params, entry, kv_quant="int8")
+    assert rel_err(got, want) < 0.05
+
+
+@pytest.mark.tier1
+def test_conformance_grid_covers_quant():
+    """Meta-test: the conformance grid can only grow. Every quantized
+    serving check named in conftest is implemented, both quantized kernel
+    adapters sit in the kernel grid, and the per-channel edge-case shape
+    is on the case list."""
+    assert {"hetero_matmul/quant_int8", "hetero_matmul/q4_w4a16"} <= \
+        set(KERNELS)
+    assert set(_ENTRY_POINTS) | {"int8_pool_gather"} == \
+        set(QUANT_SERVING_CHECKS)
+    assert len(QUANT_SERVING_CHECKS) >= 5
+    assert "quant_edges" in {c.name for c in CONFORMANCE_CASES}
+    assert len(CONFORMANCE_CASES) * len(CONFORMANCE_DTYPES) \
+        * len(KERNELS) >= 108

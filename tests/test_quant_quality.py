@@ -1,0 +1,62 @@
+"""Perplexity-drift regression for quantized serving.
+
+A seeded mini-eval scores one fixed token set, teacher-forced, on the REAL
+``smollm-135m`` config (full 576-dim / 30-layer / 49k-vocab geometry — the
+shape family whose per-channel scale statistics the smoke configs cannot
+reproduce) under fp, int8, and W4A16 weights. The mean next-token NLL
+(nats/token) under each format must stay within a pinned drift bound of the
+fp score: quantized serving is only a win if the accuracy cost stays
+bounded (the COTS-device accuracy/latency tradeoff, PAPERS.md
+arxiv 2410.03613), and this test turns that claim into a regression gate.
+``benchmarks/bench_quant.py`` reports the same drift metric next to tok/s
+and peak concurrency.
+
+Bounds are calibrated ~4x above the observed drift of the pinned seed so
+they catch quantizer regressions (a broken scale rule shifts NLL by whole
+nats) without flaking on BLAS/backend reassociation noise.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.quant import WEIGHT_FORMATS, quantize_params, score_nll
+
+# pinned per-format NLL drift bounds, nats/token (fp score ~ ln(vocab) on
+# the seeded random init; observed drift: int8 ~2e-3, w4a16 ~0.05)
+DRIFT_BOUND = {"int8": 0.02, "w4a16": 0.25}
+
+
+@pytest.fixture(scope="module")
+def mini_eval():
+    """(model, fp params, fixed token set, fp NLL) on real smollm-135m."""
+    cfg = get_config("smollm-135m").with_(param_dtype="float32",
+                                          compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(11))
+    tokens = jax.random.randint(jax.random.PRNGKey(12), (2, 129),
+                                0, cfg.vocab_size)
+    return cfg, model, params, tokens, score_nll(model, params, tokens)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("fmt", WEIGHT_FORMATS)
+def test_quant_nll_drift_within_pinned_bound(mini_eval, fmt):
+    cfg, model, params, tokens, base = mini_eval
+    qnll = score_nll(model, quantize_params(params, cfg, fmt), tokens)
+    drift = abs(qnll - base)
+    assert drift < DRIFT_BOUND[fmt], (
+        f"{fmt}: NLL drift {drift:.4f} nats/token exceeds the pinned "
+        f"bound {DRIFT_BOUND[fmt]} (fp {base:.4f} vs quant {qnll:.4f})")
+
+
+@pytest.mark.tier1
+def test_quant_formats_ordered_by_precision(mini_eval):
+    """int8 (8-bit codes) must drift no more than W4A16's pinned bound and
+    the fp score itself must be finite/sane — guards against a silently
+    diverging eval making the drift bounds vacuous."""
+    cfg, model, params, tokens, base = mini_eval
+    assert 0.0 < base < 20.0
+    int8 = abs(score_nll(model, quantize_params(params, cfg, "int8"),
+                         tokens) - base)
+    assert int8 < DRIFT_BOUND["w4a16"]

@@ -18,6 +18,11 @@ A separate prefix-cache arm replays random shared/unshared prompt mixes
 (two system prompts, random tails, a second wave over retired blocks) on
 both sync modes: warm-path outputs must stay token-identical to the
 sequential reference and cache retention must not leak.
+
+Quantized arms (weight-quant int8/w4a16, int8 KV pool, and both together)
+run the same workloads against sequential QUANTIZED references — greedy
+token identity must survive quantization because every arm dequantizes the
+same codes and the pool quantizes per token slot.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -168,6 +173,95 @@ def test_all_arms_token_identical_and_leak_free(smoke_model, seed):
                 assert 0.0 <= st["acceptance_rate"] <= 1.0
                 assert st["decode_steps"] >= st["spec_rounds"]
         assert not batcher.queue
+
+
+# ----------------------------------------------------- quantized serving --
+
+def _paged_reference(model, params, prompt, n, kv_quant=None, max_len=160):
+    """Sequential single-request reference through the PAGED path: the
+    oracle for kv-quant arms, where pool numerics (quantize-on-scatter is
+    per token slot, so chunking- and batch-width-invariant) replace the
+    dense cache's."""
+    nbs = -(-max_len // BS)
+    pool = model.init_paged_cache(num_blocks=nbs + 1, block_size=BS,
+                                  dtype=jnp.float32, kv_quant=kv_quant)
+    bt = jnp.arange(1, nbs + 1, dtype=jnp.int32)[None]
+    logits, pool = model.paged_prefill(params, jnp.asarray(prompt)[None],
+                                       pool, block_table=bt, start_index=0)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    length = len(prompt)
+    for _ in range(n - 1):
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, pool = model.paged_decode_step(
+            params, tok, pool, block_tables=bt,
+            lengths=jnp.asarray([length]))
+        out.append(int(jnp.argmax(logits[0, -1])))
+        length += 1
+    return out
+
+
+# (weight_quant, kv_quant) per fuzz arm family
+QUANT_ARMS = {
+    "w_int8": ("int8", None),
+    "w_w4a16": ("w4a16", None),
+    "kv_int8": (None, "int8"),
+    "w_w4a16_kv_int8": ("w4a16", "int8"),
+}
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("seed", [0, pytest.param(1, marks=pytest.mark.slow),
+                                  pytest.param(2, marks=pytest.mark.slow)])
+@pytest.mark.parametrize("quant", sorted(QUANT_ARMS))
+def test_quant_arms_token_identical_and_leak_free(smoke_model, seed, quant):
+    """Quantized serving fuzz: weight-quant, kv-quant, and both, through the
+    dense / paged-host / paged-device / mixed arms. Every arm quantizes the
+    SAME weights to the same codes and the int8 pool quantizes per token
+    slot, so greedy streams must be token-identical to a sequential
+    QUANTIZED reference (dense for weight-only, paged for kv-quant), and
+    the pool must drain."""
+    from repro.models.quant import dequantize_params, quantize_params
+    cfg, model, params = smoke_model
+    wq, kq = QUANT_ARMS[quant]
+    prompts, budgets, order = _workload(cfg, seed)
+    max_len = max(LEN_PALETTE) + 8 + 1
+    # references run on the DEQUANTIZED expansion of the same codes: f32
+    # dequant-then-matmul is bitwise what matmul_any executes, so this is
+    # the same oracle while reusing the suite's fp-compiled graphs (and it
+    # additionally pins quantized execution == dequantize-then-fp).
+    rparams = (dequantize_params(quantize_params(params, cfg, wq))
+               if wq else params)
+    refs = [(_paged_reference(model, rparams, p, m, kv_quant=kq)
+             if kq else _reference(model, rparams, p, m))
+            for p, m in zip(prompts, budgets)]
+
+    nb = 1 + len(prompts) * -(-max_len // BS)
+    paged = dict(num_blocks=nb, block_size=BS,
+                 max_blocks_per_seq=-(-max_len // BS), decode_width=3,
+                 buckets=(32, 64), cache_dtype=jnp.float32,
+                 weight_quant=wq, kv_quant=kq)
+    arms = {
+        "paged_host": lambda: PagedBatcher(cfg, params, sync="host", **paged),
+        "paged_device": lambda: PagedBatcher(cfg, params, sync="device",
+                                             window=3, **paged),
+        "mixed": lambda: PagedBatcher(cfg, params, sync="device", window=3,
+                                      mixed_batch=True, **paged),
+    }
+    if kq is None:      # the dense batcher has no paged pool to quantize
+        arms["dense"] = lambda: ContinuousBatcher(
+            cfg, params, max_batch=3, max_len=max_len, buckets=(32, 64),
+            weight_quant=wq)
+    for name, make in arms.items():
+        batcher = make()
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=budgets[i])
+                for i in order]
+        batcher.run(reqs)
+        for r in reqs:
+            assert r.done, (quant, name, seed, r.rid)
+            assert r.output == refs[r.rid], (quant, name, seed, r.rid)
+        if isinstance(batcher, PagedBatcher):
+            batcher.kv.assert_drained()
+        assert not batcher.busy and not batcher.queue
 
 
 # ----------------------------------------------------------- open loop ----
