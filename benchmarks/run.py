@@ -33,6 +33,7 @@ MODULES = [
     "benchmarks.bench_prefix",            # prefix caching vs cold prefill
     "benchmarks.bench_open_loop",         # open-loop TTFT/TPOT percentiles
     "benchmarks.bench_quant",             # quantized weights + int8 KV pool
+    "benchmarks.bench_tp",                # tensor-parallel paged serving
     "benchmarks.roofline_report",         # §Roofline
 ]
 

@@ -28,7 +28,8 @@ EXPECTED_MODULES = (
     "test_mixed_batch", "test_models", "test_paged_cache",
     "test_prefix_cache", "test_quant_quality", "test_sampler",
     "test_scheduler_fuzz", "test_serving", "test_solver_properties",
-    "test_spec", "test_system", "test_telemetry", "test_training",
+    "test_spec", "test_system", "test_telemetry", "test_tp_serving",
+    "test_training",
 )
 
 

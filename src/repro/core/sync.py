@@ -158,7 +158,7 @@ def paged_decode_window(model, params, last_token, pool, block_tables,
                         lengths, remaining, rng, n_steps: int, *,
                         sampler=None, eos_id=None, prefill_tokens=None,
                         prefill_table=None, prefill_start=0,
-                        mixed_step_fn=None):
+                        mixed_step_fn=None, decode_step_fn=None):
     """Fused-window paged decode: ONE dispatch for ``n_steps`` batched steps.
 
     last_token: [W, 1] each lane's most recent token; block_tables: [W, NBmax]
@@ -177,21 +177,26 @@ def paged_decode_window(model, params, last_token, pool, block_tables,
     concurrently with the window's first decode step, and the return gains
     the chunk's last-token logits as a third element —
     (tokens, valid, prefill_logits, pool, lengths, remaining).
-    ``mixed_step_fn`` must be a STABLE callable (cached by the caller, e.g.
-    ``partial(model.mixed_step, hetero_ctx=ctx)``) so jit caching holds
-    across windows; it defaults to ``model.mixed_step``.
+    ``mixed_step_fn`` / ``decode_step_fn`` must be STABLE callables (cached
+    by the caller, e.g. ``partial(model.mixed_step, hetero_ctx=ctx)`` or a
+    layout object's shard_map-wrapped step) so jit caching holds across
+    windows; they default to the model's own step functions. The override is
+    how tensor-parallel serving threads its sharded step into the fused
+    window: the shard_map body simply becomes the scanned step.
     """
     keys = jax.random.split(rng, n_steps)
+    decode_step = (decode_step_fn if decode_step_fn is not None
+                   else model.paged_decode_step)
     if prefill_tokens is None:
         return _paged_window(params, last_token, pool, block_tables, lengths,
                              remaining, keys,
-                             decode_step=model.paged_decode_step,
+                             decode_step=decode_step,
                              n_steps=n_steps, sampler=sampler, eos_id=eos_id)
     return _paged_mixed_window(
         params, last_token, pool, block_tables, lengths, remaining, keys,
         prefill_tokens, prefill_table,
         jnp.asarray(prefill_start, jnp.int32),
-        decode_step=model.paged_decode_step,
+        decode_step=decode_step,
         mixed_step=(mixed_step_fn if mixed_step_fn is not None
                     else model.mixed_step),
         n_steps=n_steps, sampler=sampler, eos_id=eos_id)

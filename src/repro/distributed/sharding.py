@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import contextvars
 import re
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -152,15 +153,40 @@ def _axis_size(mesh, axes) -> int:
     return n
 
 
-def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
+class ShardingDropWarning(UserWarning):
+    """A requested sharding was silently turned into replication."""
+
+
+_SANITIZE_WARNED: set = set()
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh, *, dropped: list = None) -> P:
     """Drop sharding on any dim the mesh axes don't divide evenly (pjit
     argument shardings require exact divisibility). This is the generic
-    guard for e.g. vocab=504, n_kv_heads=8 on a 16-wide model axis, batch=1."""
+    guard for e.g. vocab=504, n_kv_heads=8 on a 16-wide model axis, batch=1.
+
+    Dropping is NOT silent: each distinct (dim, size, axes) drop emits a
+    one-time ``ShardingDropWarning`` (an intended shard quietly becoming
+    full replication is a capacity bug, not a preference), and callers that
+    must *know* — e.g. TP serving asserting its KV-head dim actually sharded
+    — can pass ``dropped=[]`` to receive the dim indices that replicated.
+    """
     entries = list(spec) + [None] * (len(shape) - len(list(spec)))
     out = []
-    for dim, ax in zip(shape, entries):
-        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0
-                   else None)
+    for i, (dim, ax) in enumerate(zip(shape, entries)):
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            if dropped is not None:
+                dropped.append(i)
+            key = (i, dim, ax if isinstance(ax, str) else tuple(ax))
+            if key not in _SANITIZE_WARNED:
+                _SANITIZE_WARNED.add(key)
+                warnings.warn(
+                    f"sanitize_spec: dim {i} (size {dim}) is not divisible "
+                    f"by mesh axes {ax!r} (size {_axis_size(mesh, ax)}); "
+                    "dropping the sharding — this dim will REPLICATE",
+                    ShardingDropWarning, stacklevel=2)
+            ax = None
+        out.append(ax)
     while out and out[-1] is None:
         out.pop()
     return P(*out)

@@ -29,6 +29,30 @@ from repro.distributed.compat import shard_map
 NEG_INF = -1e30
 
 
+def combine_split_softmax(s, v_local, axis_name=None):
+    """Numerically-stable softmax combine of per-shard attention partials —
+    the pmax + 2×psum pattern (one [B, Hkv, G] pmax, then psums of the
+    [B, Hq, D]-sized numerator and the [B, Hkv, G] denominator).
+
+    ``s``: local masked scores [B, Hkv, G, K_local] (NEG_INF outside range);
+    ``v_local``: local values [B, K_local, Hkv, D]. With ``axis_name=None``
+    (single shard / unit tests) the collectives degenerate to identity and
+    this is exactly a blockwise-stable softmax-weighted sum.
+
+    Returns fp32 [B, Hkv, G, D].
+    """
+    m_l = s.max(axis=-1)                                # [B, Hkv, G]
+    m_g = jax.lax.pmax(m_l, axis_name) if axis_name else m_l
+    p = jnp.exp(s - m_g[..., None])
+    den = p.sum(axis=-1)
+    num = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_local.dtype), v_local,
+                     preferred_element_type=jnp.float32)
+    if axis_name:
+        den = jax.lax.psum(den, axis_name)
+        num = jax.lax.psum(num, axis_name)
+    return num / jnp.where(den == 0.0, 1.0, den)[..., None]
+
+
 def _mesh_axes():
     from repro.distributed.compat import get_mesh
     mesh = get_mesh()
@@ -47,6 +71,12 @@ def split_kv_decode_update_attend(q, k_new, v_new, k_cache, v_cache, idx):
     Hkv = k_new.shape[2]
     Smax = k_cache.shape[1]
     n_shards = mesh.shape["model"]
+    if Smax % n_shards != 0:
+        raise ValueError(
+            f"split-KV cache length Smax={Smax} is not divisible by the "
+            f"model-axis size {n_shards}: the trailing {Smax % n_shards} "
+            "slots would never be attended over and writes to them would be "
+            "silently dropped. Pad Smax to a multiple of the shard count.")
     chunk = Smax // n_shards
     scale = 1.0 / math.sqrt(D)
     G = Hq // Hkv
@@ -78,15 +108,7 @@ def split_kv_decode_update_attend(q, k_new, v_new, k_cache, v_cache, idx):
                        preferred_element_type=jnp.float32) * scale
         kv_pos = start + jnp.arange(chunk, dtype=jnp.int32)
         s = jnp.where(kv_pos[None, None, None, :] <= i, s, NEG_INF)
-        m_l = s.max(axis=-1)                            # [B, Hkv, G]
-        m_g = jax.lax.pmax(m_l, "model")
-        p = jnp.exp(s - m_g[..., None])
-        den = jax.lax.psum(p.sum(axis=-1), "model")
-        num = jax.lax.psum(
-            jnp.einsum("bhgk,bkhd->bhgd", p.astype(vc.dtype), vc,
-                       preferred_element_type=jnp.float32),
-            "model")
-        out = (num / jnp.where(den == 0.0, 1.0, den)[..., None])
+        out = combine_split_softmax(s, vc, "model")
         return out.reshape(Bl, 1, Hq, D).astype(qx.dtype), kc, vc
 
     return shard_map(

@@ -35,6 +35,12 @@ Paged mode fuses the engine into the serving path
                     dispatch the in-VMEM-dequant MXU kernels (models/quant)
   --kv-quant int8   int8 paged KV pool: quantize-on-scatter with per-slot
                     bf16 scales — equal pool memory holds ~2x the tokens
+  --tp N            tensor-parallel serving over an N-wide ``model`` mesh
+                    axis: weights and the paged KV pool shard head-wise
+                    (serving/layout.py), host bookkeeping stays replicated,
+                    greedy streams stay bit-identical to --tp 1 (on CPU,
+                    export XLA_FLAGS=--xla_force_host_platform_device_count=N
+                    first; incompatible with --engine-mode)
   --stats           print the scheduler's unified stats() counter dict
 
 Batched serving always runs through the async ingress
@@ -123,6 +129,10 @@ def main(argv=None):
                     choices=["int8"],
                     help="quantize the paged KV pool to int8 codes with "
                          "per-token-slot scales (paged mode)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width: shard weights + paged KV "
+                         "pool over an N-wide 'model' mesh axis "
+                         "(paged mode; needs N visible devices)")
     ap.add_argument("--stats", action="store_true",
                     help="print the scheduler's stats() counter dict")
     ap.add_argument("--open-loop", action="store_true", dest="open_loop",
@@ -155,11 +165,17 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if (args.sync == "device" or args.engine_mode or args.eos_id is not None
             or args.mixed_batch or args.spec_k is not None
-            or args.prefix_cache or args.weight_quant or args.kv_quant) \
+            or args.prefix_cache or args.weight_quant or args.kv_quant
+            or args.tp > 1) \
             and not (args.batched and args.paged):
         ap.error("--sync device / --engine-mode / --eos-id / --mixed-batch "
                  "/ --spec-k / --prefix-cache / --weight-quant / --kv-quant "
-                 "apply to the paged batcher: add --batched --paged")
+                 "/ --tp apply to the paged batcher: add --batched --paged")
+    if args.tp < 1:
+        ap.error("--tp must be >= 1")
+    if args.tp > 1 and args.engine_mode:
+        ap.error("--tp and --engine-mode are mutually exclusive: the hetero "
+                 "engine and the device mesh are separate axes")
     if args.max_prefill_chunk is not None and not args.mixed_batch:
         ap.error("--max-prefill-chunk applies to --mixed-batch")
     if args.spec_draft is not None and args.spec_k is None:
@@ -189,6 +205,10 @@ def main(argv=None):
                 from repro.serving.spec import SpecConfig
                 spec = SpecConfig(k=args.spec_k, draft=args.spec_draft,
                                   smoke=args.smoke)
+            mesh = None
+            if args.tp > 1:
+                from repro.launch.mesh import make_host_mesh
+                mesh = make_host_mesh(1, args.tp)
             num_blocks = args.max_blocks or (
                 1 + args.requests * -(-max_len // args.block_size))
             # cap per-request tables at the longest possible request, not
@@ -206,10 +226,11 @@ def main(argv=None):
                               max_prefill_chunk_per_step=args.max_prefill_chunk,
                               spec=spec, prefix_cache=args.prefix_cache,
                               weight_quant=args.weight_quant,
-                              kv_quant=args.kv_quant)
+                              kv_quant=args.kv_quant, mesh=mesh)
             label = (f"paged (bs={args.block_size}, "
                      f"blocks={num_blocks}, W={args.decode_width}, "
                      f"sync={args.sync}"
+                     + (f", tp={args.tp}" if args.tp > 1 else "")
                      + (f", window={args.window}" if args.sync == "device"
                         else "")
                      + (f", engine={args.engine_mode}" if args.engine_mode

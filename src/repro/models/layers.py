@@ -21,6 +21,15 @@ from repro.core.partition import matmul_any
 NEG_INF = -1e30
 
 
+def tp_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
+    """Reassemble a column-sharded tensor along its LAST axis, concatenating
+    the per-shard blocks in shard order. Every output column is produced by
+    exactly one shard with the same reduction order as the unsharded matmul,
+    so tensor-parallel execution under this gather is bit-exact with the
+    single-device path (no psum-of-partials reassociation)."""
+    return jax.lax.all_gather(x, axis_name, axis=x.ndim - 1, tiled=True)
+
+
 def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
     """fp32 statistics WITHOUT materializing an fp32 copy of x: the square/
     convert fuse into the reduction; the big tensors stay in compute dtype
@@ -245,7 +254,8 @@ def attention(
     return out, new_kv
 
 
-def quantize_kv_slot(x: jax.Array, scale_dtype=jnp.bfloat16
+def quantize_kv_slot(x: jax.Array, scale_dtype=jnp.bfloat16,
+                     tp_axis: Optional[str] = None
                      ) -> tuple[jax.Array, jax.Array]:
     """Per-token-slot symmetric int8 KV quantization. x: [T, Hkv, D] ->
     (codes int8 [T, Hkv, D], scale [T]).
@@ -256,8 +266,16 @@ def quantize_kv_slot(x: jax.Array, scale_dtype=jnp.bfloat16
     bit-exactly across any chunking of the same token stream (prefill vs
     decode vs mixed vs verify writes). An all-zero slot stores scale 0 —
     it dequantizes to exactly 0, like an unwritten fp pool slot.
+
+    Under head-sharded tensor parallelism (``tp_axis`` set inside a
+    shard_map) each shard sees only its local KV heads, but the slot scale
+    is defined over ALL heads — a pmax over the tp axis recovers the exact
+    global amax (max-of-maxes is exact), so codes and scales stay
+    bit-identical to the single-device pool.
     """
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1))   # [T]
+    if tp_axis is not None:
+        amax = jax.lax.pmax(amax, tp_axis)
     s_stored = jnp.where(amax > 0, amax / 127.0, 0.0).astype(scale_dtype)
     denom = jnp.where(s_stored == 0, 1.0, s_stored.astype(jnp.float32))
     codes = jnp.clip(jnp.round(x.astype(jnp.float32) / denom[..., None, None]),
@@ -280,6 +298,7 @@ def paged_attention(
     block_table: jax.Array,         # [B, NBmax] int32 pool block ids (0=null)
     unroll: bool = False,
     hetero_ctx=None,
+    tp_axis: Optional[str] = None,
 ):
     """GQA attention over a paged KV pool (serving/paged_cache.py).
 
@@ -295,6 +314,12 @@ def paged_attention(
     per-slot codes + one scale scalar per (slot, tensor) — and dequantizes
     inside the gather, so equal pool memory holds ~2x the blocks while the
     attention math itself stays in compute precision.
+
+    With ``tp_axis`` set (inside a shard_map whose mesh axis carries the KV
+    heads), ``cfg`` holds the LOCAL head counts, the pool leaves are local
+    head slices, and the whole scatter/gather/softmax runs shard-local; the
+    only collectives are the head gather before ``wo`` and the output-column
+    gather after it (both [B, S, d]-sized, bit-exact concatenations).
 
     Returns (out, updated per-layer pool dict with the same keys).
     """
@@ -313,9 +338,9 @@ def paged_attention(
     new_pool = {}
     if quant:
         k_codes, k_sc = quantize_kv_slot(k.reshape(B * S, Hkv, D),
-                                         pool["k_scale"].dtype)
+                                         pool["k_scale"].dtype, tp_axis)
         v_codes, v_sc = quantize_kv_slot(v.reshape(B * S, Hkv, D),
-                                         pool["v_scale"].dtype)
+                                         pool["v_scale"].dtype, tp_axis)
         fk = fk.at[flat_idx].set(k_codes)
         fv = fv.at[flat_idx].set(v_codes)
         new_pool["k_scale"] = pool["k_scale"].reshape(
@@ -344,7 +369,12 @@ def paged_attention(
     o = blockwise_attention(q, ck, cv, q_pos=pos, kv_pos=kv_pos,
                             causal=True, block_k=cfg.attn_block_k,
                             unroll=unroll)
-    out = mm(o.reshape(B, S, cfg.n_heads * hd), p["wo"], name="wo")
+    o = o.reshape(B, S, cfg.n_heads * hd)
+    if tp_axis is not None:
+        o = tp_all_gather(o, tp_axis)       # local heads -> full head dim
+    out = mm(o, p["wo"], name="wo")
+    if tp_axis is not None:
+        out = tp_all_gather(out, tp_axis)   # wo is output-column sharded
     return out, new_pool
 
 
@@ -361,11 +391,23 @@ def init_swiglu(key, d: int, d_ff: int, dtype) -> dict:
     }
 
 
-def swiglu(p: dict, x: jax.Array, hetero_ctx=None) -> jax.Array:
+def swiglu(p: dict, x: jax.Array, hetero_ctx=None,
+           tp_axis: Optional[str] = None) -> jax.Array:
+    """With ``tp_axis`` set, w_gate/w_up are column-sharded (local d_ff
+    slice) and w_down is output-column sharded: the hidden activation and
+    the output are reassembled with bit-exact tiled all-gathers instead of
+    a psum of row-parallel partials (which would reassociate the d_ff
+    reduction and drift from the single-device numerics)."""
     mm = hetero_ctx.matmul if hetero_ctx is not None else matmul_any
     g = mm(x, p["w_gate"], name="w_gate")
     u = mm(x, p["w_up"], name="w_up")
-    return mm(jax.nn.silu(g) * u, p["w_down"], name="w_down")
+    h = jax.nn.silu(g) * u
+    if tp_axis is not None:
+        h = tp_all_gather(h, tp_axis)       # local d_ff columns -> full d_ff
+    out = mm(h, p["w_down"], name="w_down")
+    if tp_axis is not None:
+        out = tp_all_gather(out, tp_axis)   # w_down output-column sharded
+    return out
 
 
 # ----------------------------------------------------------------- lm head --

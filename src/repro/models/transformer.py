@@ -51,13 +51,13 @@ def init_params(key, cfg) -> dict:
 
 
 def _layer(lp, x, cfg, *, positions, kv=None, cache_index=None, unroll=False,
-           hetero_ctx=None, paged=None):
+           hetero_ctx=None, paged=None, tp_axis=None):
     h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
     if paged is not None:
         attn_out, new_kv = paged_attention(
             lp["attn"], h, cfg, positions=positions,
             pool=paged["pool"], block_table=paged["block_table"],
-            unroll=unroll, hetero_ctx=hetero_ctx)
+            unroll=unroll, hetero_ctx=hetero_ctx, tp_axis=tp_axis)
     else:
         attn_out, new_kv = attention(lp["attn"], h, cfg, positions=positions,
                                      cache=kv, cache_index=cache_index,
@@ -67,7 +67,8 @@ def _layer(lp, x, cfg, *, positions, kv=None, cache_index=None, unroll=False,
     if cfg.moe:
         ffn_out, aux = moe_ffn(lp["moe"], h, cfg, hetero_ctx=hetero_ctx)
     else:
-        ffn_out, aux = swiglu(lp["ffn"], h, hetero_ctx=hetero_ctx), jnp.zeros((), jnp.float32)
+        ffn_out, aux = swiglu(lp["ffn"], h, hetero_ctx=hetero_ctx,
+                              tp_axis=tp_axis), jnp.zeros((), jnp.float32)
     return hidden_constraint(x + ffn_out), new_kv, aux
 
 
@@ -133,15 +134,22 @@ def _head_matrix(params, cfg):
     return (params["embed"].T if cfg.tie_embeddings else params["head"])
 
 
-def _head_logits(params, x, cfg, hetero_ctx=None):
+def _head_logits(params, x, cfg, hetero_ctx=None, tp_axis=None):
     """LM-head matmul — a partitionable site like any other (the latency
     table profiles it as "head"), so inference paths route it through the
-    HeteroCtx when one is given."""
+    HeteroCtx when one is given. Under tensor parallelism an untied head is
+    vocab-column sharded: local logits are gathered along V (bit-exact
+    column concatenation); a tied head reads the replicated embedding and
+    needs no collective."""
     if hetero_ctx is not None:
         y = hetero_ctx.matmul(x, _head_matrix(params, cfg), name="head")
     else:
         y = matmul_any(x, _head_matrix(params, cfg))
-    return y.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if tp_axis is not None and not cfg.tie_embeddings:
+        from .layers import tp_all_gather
+        y = tp_all_gather(y, tp_axis)
+    return y
 
 
 def loss_fn(params, inputs, targets, cfg, *, unroll=False):
@@ -235,7 +243,7 @@ def init_paged_cache(cfg, *, num_blocks: int, block_size: int,
 
 
 def _run_layers_paged(params, x, cfg, *, positions, pool, block_table,
-                      unroll=False, hetero_ctx=None):
+                      unroll=False, hetero_ctx=None, tp_axis=None):
     """Like ``_run_layers`` but attention reads/writes the paged pool;
     scans over (layer params, per-layer pages) — the pool is a pytree of
     ``[L, ...]`` leaves (K/V tensors plus the int8 pool's scale planes), so
@@ -246,7 +254,7 @@ def _run_layers_paged(params, x, cfg, *, positions, pool, block_table,
             lp = jax.tree.map(lambda a: a[i], params["layers"])
             pl = jax.tree.map(lambda a: a[i], pool)
             x, npl, _ = _layer(lp, x, cfg, positions=positions, unroll=True,
-                               hetero_ctx=hetero_ctx,
+                               hetero_ctx=hetero_ctx, tp_axis=tp_axis,
                                paged={"pool": pl,
                                       "block_table": block_table})
             new_pools.append(npl)
@@ -255,7 +263,7 @@ def _run_layers_paged(params, x, cfg, *, positions, pool, block_table,
     def step(carry, xs):
         lp, pl = xs
         x2, npl, _ = _layer(lp, carry, cfg, positions=positions,
-                            hetero_ctx=hetero_ctx,
+                            hetero_ctx=hetero_ctx, tp_axis=tp_axis,
                             paged={"pool": pl,
                                    "block_table": block_table})
         return x2, npl
@@ -265,7 +273,7 @@ def _run_layers_paged(params, x, cfg, *, positions, pool, block_table,
 
 
 def paged_prefill(params, tokens, pool, cfg, *, block_table, start_index=0,
-                  unroll=False, hetero_ctx=None):
+                  unroll=False, hetero_ctx=None, tp_axis=None):
     """Prefill a prompt chunk into the request's pages. tokens: [B, S];
     block_table: [B, NBmax]. ``start_index`` is a scalar (uniform batches —
     chunked prefill resuming at the chunk offset, or a cached-prefix suffix
@@ -281,14 +289,15 @@ def paged_prefill(params, tokens, pool, cfg, *, block_table, start_index=0,
                  if start_index.ndim == 1 else start_index + steps)
     x, pool = _run_layers_paged(params, x, cfg, positions=positions,
                                 pool=pool, block_table=block_table,
-                                unroll=unroll, hetero_ctx=hetero_ctx)
+                                unroll=unroll, hetero_ctx=hetero_ctx,
+                                tp_axis=tp_axis)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = _head_logits(params, x[:, -1:, :], cfg, hetero_ctx)
+    logits = _head_logits(params, x[:, -1:, :], cfg, hetero_ctx, tp_axis)
     return logits, pool
 
 
 def paged_verify(params, tokens, pool, cfg, *, block_table, start_index,
-                 unroll=False, hetero_ctx=None):
+                 unroll=False, hetero_ctx=None, tp_axis=None):
     """Speculative-decoding verification step: append ``tokens`` ([B, K+1] —
     each lane's pending token plus its K drafted tokens) after each lane's
     cached prefix and return PER-POSITION logits over all K+1 positions.
@@ -317,15 +326,16 @@ def paged_verify(params, tokens, pool, cfg, *, block_table, start_index,
     x = _embed(params, tokens, cfg)
     x, pool = _run_layers_paged(params, x, cfg, positions=positions,
                                 pool=pool, block_table=block_table,
-                                unroll=unroll, hetero_ctx=hetero_ctx)
+                                unroll=unroll, hetero_ctx=hetero_ctx,
+                                tp_axis=tp_axis)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = _head_logits(params, x, cfg, hetero_ctx)
+    logits = _head_logits(params, x, cfg, hetero_ctx, tp_axis)
     return logits, pool
 
 
 def mixed_step(params, decode_tokens, prefill_tokens, pool, cfg, *,
                decode_tables, decode_lengths, prefill_table, prefill_start=0,
-               unroll=False, hetero_ctx=None):
+               unroll=False, hetero_ctx=None, tp_axis=None):
     """Stage-parallel mixed batch: ONE dispatch runs a batched paged decode
     step for every lane AND one prefill chunk of an admitting request,
     sharing a single paged-pool write (paper §4.1-§4.3 applied at stage
@@ -352,10 +362,11 @@ def mixed_step(params, decode_tokens, prefill_tokens, pool, cfg, *,
         # decode lanes first (flexible path), prefill chunk second
         # (solver-planned path); order is arbitrary — disjoint block tables
         xd2, npd, _ = _layer(lp, xd, cfg, positions=dec_pos, unroll=unroll,
+                             tp_axis=tp_axis,
                              paged={"pool": pl,
                                     "block_table": decode_tables})
         xp2, npp, _ = _layer(lp, xp, cfg, positions=pre_pos, unroll=unroll,
-                             hetero_ctx=hetero_ctx,
+                             hetero_ctx=hetero_ctx, tp_axis=tp_axis,
                              paged={"pool": npd,
                                     "block_table": prefill_table})
         return xd2, xp2, npp
@@ -379,14 +390,14 @@ def mixed_step(params, decode_tokens, prefill_tokens, pool, cfg, *,
             step, (xd, xp), (params["layers"], pool))
 
     xd = rms_norm(xd, params["final_norm"], cfg.norm_eps)
-    dec_logits = _head_logits(params, xd, cfg)     # flexible-path head
+    dec_logits = _head_logits(params, xd, cfg, None, tp_axis)  # flexible path
     xp = rms_norm(xp, params["final_norm"], cfg.norm_eps)
-    pre_logits = _head_logits(params, xp[:, -1:, :], cfg, hetero_ctx)
+    pre_logits = _head_logits(params, xp[:, -1:, :], cfg, hetero_ctx, tp_axis)
     return dec_logits, pre_logits, pool
 
 
 def paged_decode_step(params, token, pool, cfg, *, block_tables, lengths,
-                      unroll=False, hetero_ctx=None):
+                      unroll=False, hetero_ctx=None, tp_axis=None):
     """One batched decode step over the page pool. token: [B, 1];
     block_tables: [B, NBmax]; lengths: [B] per-request write positions.
     Inactive lanes (length 0, null table) sink writes into the null block.
@@ -395,9 +406,10 @@ def paged_decode_step(params, token, pool, cfg, *, block_tables, lengths,
     positions = lengths[:, None].astype(jnp.int32)
     x, pool = _run_layers_paged(params, x, cfg, positions=positions,
                                 pool=pool, block_table=block_tables,
-                                unroll=unroll, hetero_ctx=hetero_ctx)
+                                unroll=unroll, hetero_ctx=hetero_ctx,
+                                tp_axis=tp_axis)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = _head_logits(params, x, cfg, hetero_ctx)
+    logits = _head_logits(params, x, cfg, hetero_ctx, tp_axis)
     return logits, pool
 
 

@@ -238,7 +238,8 @@ class PagedKVCache:
 
     def __init__(self, cfg, *, num_blocks: int, block_size: int = 32,
                  max_blocks_per_seq: int | None = None, dtype=jnp.bfloat16,
-                 prefix_cache: bool = False, kv_quant: str | None = None):
+                 prefix_cache: bool = False, kv_quant: str | None = None,
+                 layout=None):
         from repro.models import transformer
         self.cfg = cfg
         self.block_size = block_size
@@ -250,6 +251,12 @@ class PagedKVCache:
         self.pool = transformer.init_paged_cache(
             cfg, num_blocks=num_blocks, block_size=block_size, dtype=dtype,
             kv_quant=kv_quant)
+        # all bookkeeping below reasons about LOGICAL block ids only; the
+        # layout object (serving/layout.py) is the single owner of physical
+        # placement, so a head-sharded pool changes nothing here
+        self.layout = layout
+        if layout is not None:
+            self.pool = layout.place_pool(self.pool)
         self.allocator = BlockAllocator(num_blocks)
         self._reserved_unheld = 0      # promised at admission, not yet alloc'd
         self.prefix_cache = prefix_cache

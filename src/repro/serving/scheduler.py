@@ -340,9 +340,15 @@ class PagedBatcher:
                  spec_draft_params=None, interpret: bool = True,
                  prefix_cache: bool = False,
                  weight_quant: str | None = None,
-                 kv_quant: str | None = None):
+                 kv_quant: str | None = None,
+                 mesh=None):
         if sync not in ("host", "device"):
             raise ValueError(f"sync must be 'host' or 'device', got {sync!r}")
+        if mesh is not None and engine_mode is not None:
+            raise ValueError(
+                "engine_mode and mesh are mutually exclusive: the hetero "
+                "engine partitions matmuls within one device, tensor "
+                "parallelism partitions them across the mesh")
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
         if isinstance(spec, int):
@@ -386,10 +392,17 @@ class PagedBatcher:
                     else jnp.dtype(cfg.compute_dtype))
         self.block_size = block_size
         self.prefix_cache = prefix_cache
+        # the layout object owns physical placement (single-device identity
+        # or head-sharded tensor parallelism over mesh's 'model' axis); all
+        # scheduler bookkeeping below it stays replicated/device-agnostic
+        from repro.serving.layout import make_layout
+        self.mesh = mesh
+        self.layout = make_layout(cfg, mesh)
         self.kv = PagedKVCache(
             cfg, num_blocks=num_blocks, block_size=block_size,
             max_blocks_per_seq=max_blocks_per_seq,
-            dtype=fp_dtype, prefix_cache=prefix_cache, kv_quant=kv_quant)
+            dtype=fp_dtype, prefix_cache=prefix_cache, kv_quant=kv_quant,
+            layout=self.layout if mesh is not None else None)
         self.W = decode_width
         self.buckets = tuple(sorted(buckets))
         self.sampler = sampler
@@ -460,6 +473,11 @@ class PagedBatcher:
         self.accepted_tokens = 0         # drafts the target verified correct
         self.verify_dispatches = 0       # batched paged_verify dispatches
 
+        # the four paged inference paths, as the layout executes them: the
+        # model's own entry points on a single device, shard_map-wrapped TP
+        # variants over a mesh (stable callables — one jit cache each)
+        paged_fns = self.layout.step_fns(self.model, self.params)
+
         if spec is not None:
             if self.model.paged_verify is None:
                 raise ValueError(f"{cfg.name}: speculative decoding requires"
@@ -479,25 +497,36 @@ class PagedBatcher:
                 dtype=fp_dtype)       # draft caches stay fp under kv_quant
             vctx = (self.ctx.for_verify(spec.k, decode_width)
                     if self.ctx is not None else None)
-            self._verify = jax.jit(partial(self.model.paged_verify,
+            self._verify = jax.jit(partial(paged_fns["paged_verify"],
                                            hetero_ctx=vctx),
                                    donate_argnums=(2,))
             self._accept = jax.jit(greedy_verify)
         else:
             self.drafts = None
 
+        # TP placement happens AFTER DraftLanes capture self.params: draft
+        # lanes keep a deliberately-replicated (single-device) copy, so the
+        # draft stream stays collective-free and bit-identical to the TP=1
+        # draft; only the target model's weights shard
+        self.params = self.layout.place_params(self.params)
+
         # the solver plan is baked in at trace time ('graphs generated in
         # advance'): jit compiles one graph per chunk length, so standard
         # buckets hit the compile cache and only a novel ragged remainder
         # pays the trace+compile that bucketing amortizes
-        self._prefill = jax.jit(partial(self.model.paged_prefill,
+        self._prefill = jax.jit(partial(paged_fns["paged_prefill"],
                                         hetero_ctx=self.ctx),
                                 donate_argnums=(2,))
-        self._decode = jax.jit(self.model.paged_decode_step,
+        self._decode = jax.jit(paged_fns["paged_decode_step"],
                                donate_argnums=(2,))
+        # the fused-window scan body: None = the model's own step (single
+        # device); the layout's shard_map step under TP (stable identity,
+        # it is a static arg of the jitted window)
+        self._decode_step_fn = (paged_fns["paged_decode_step"]
+                                if mesh is not None else None)
         # stable callables (one jit cache each) for the mixed-batch arms:
         # decode lanes stay on the flexible path, the chunk gets the ctx
-        self._mixed_step_fn = partial(self.model.mixed_step,
+        self._mixed_step_fn = partial(paged_fns["mixed_step"],
                                       hetero_ctx=self.ctx)
         self._mixed = jax.jit(self._mixed_step_fn, donate_argnums=(3,))
 
@@ -517,6 +546,7 @@ class PagedBatcher:
         draft-model work is deliberately kept out of the headline
         number)."""
         s = {
+            "tp": self.layout.tp,
             "peak_active": self.peak_active,
             "decode_dispatches": self.decode_dispatches,
             "decode_steps": self.decode_steps,
@@ -893,7 +923,8 @@ class PagedBatcher:
                 self.model, self.params, jnp.asarray(last), self.kv.pool,
                 jnp.asarray(tables), jnp.asarray(lengths),
                 jnp.asarray(remaining), sub, w,
-                sampler=self.sampler, eos_id=self.eos_id)
+                sampler=self.sampler, eos_id=self.eos_id,
+                decode_step_fn=self._decode_step_fn)
         else:
             piece, bt, start = adm_chunk
             toks, valid, pre_logits, self.kv.pool, _, _ = paged_decode_window(
@@ -902,7 +933,8 @@ class PagedBatcher:
                 jnp.asarray(remaining), sub, w,
                 sampler=self.sampler, eos_id=self.eos_id,
                 prefill_tokens=piece, prefill_table=bt, prefill_start=start,
-                mixed_step_fn=self._mixed_step_fn)
+                mixed_step_fn=self._mixed_step_fn,
+                decode_step_fn=self._decode_step_fn)
             self.fused_steps += 1
         self.decode_dispatches += 1
         toks = np.asarray(toks)

@@ -171,3 +171,125 @@ def test_split_kv_decode_matches_oracle():
         ref = decode_attention_ref(q[:, 0], kc2, vc2, pos + 1)
         assert float(jnp.abs(out[:, 0] - ref).max()) < 1e-5, pos
         assert float(jnp.abs(np.asarray(ck) - np.asarray(kc2)).max()) == 0.0
+
+
+def test_split_kv_indivisible_smax_raises():
+    """Regression: Smax not divisible by the model-axis size used to
+    silently floor-divide — the trailing ``Smax % n_shards`` slots were
+    never attended over and writes to them were dropped. Must raise."""
+    from repro.distributed.split_kv import split_kv_decode_update_attend
+    mesh = small_mesh()                       # model axis = 4
+    B, Smax, Hq, Hkv, D = 4, 66, 8, 2, 16    # 66 % 4 == 2
+    ks = jax.random.split(RNG, 5)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), jnp.float32)
+    kn = jax.random.normal(ks[1], (B, 1, Hkv, D), jnp.float32)
+    vn = jax.random.normal(ks[2], (B, 1, Hkv, D), jnp.float32)
+    kc = jax.random.normal(ks[3], (B, Smax, Hkv, D), jnp.float32)
+    vc = jax.random.normal(ks[4], (B, Smax, Hkv, D), jnp.float32)
+    with set_mesh(mesh):
+        with pytest.raises(ValueError, match="not divisible"):
+            split_kv_decode_update_attend(q, kn, vn, kc, vc,
+                                          jnp.asarray(65, jnp.int32))
+
+
+def test_combine_split_softmax_matches_dense_on_ragged_lengths():
+    """The split-softmax combine == one dense softmax-weighted sum, on
+    RAGGED lengths: per-batch valid prefixes that straddle shard
+    boundaries, including a length-1 row whose non-owner shards see
+    all-NEG_INF scores (their partials must contribute exactly zero)."""
+    from repro.distributed.split_kv import NEG_INF, combine_split_softmax
+    B, K, Hkv, G, D = 3, 48, 2, 4, 16
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, Hkv, G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, Hkv, D), jnp.float32)
+    lengths = jnp.asarray([1, 17, 48])       # ragged; 17 straddles K/4=12
+    s = jnp.einsum("bhgd,bkhd->bhgk", q, k)
+    mask = jnp.arange(K)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    ref = jnp.einsum("bhgk,bkhd->bhgd", jax.nn.softmax(s, axis=-1), v)
+
+    # axis_name=None: the collectives degenerate to identity
+    local = combine_split_softmax(s, v)
+    assert float(jnp.abs(local - ref).max()) < 1e-5
+
+    # K split over a 4-wide model axis: partials combine across shards
+    mesh = jax.make_mesh((4,), ("model",))
+    sharded = shard_map(
+        lambda sl, vl: combine_split_softmax(sl, vl, "model"),
+        mesh=mesh,
+        in_specs=(P(None, None, None, "model"), P(None, "model")),
+        out_specs=P(), check_vma=False)(s, v)
+    assert float(jnp.abs(sharded - ref).max()) < 1e-5
+
+
+def test_sanitize_spec_warns_and_reports_dropped_dims():
+    """Regression: sanitize_spec silently replaced an intended shard with
+    full replication (a capacity bug at scale — e.g. vocab=504 or
+    n_kv_heads=8 on a 16-wide model axis). It must warn once per distinct
+    drop and report the replicated dim indices through ``dropped``."""
+    import types
+    import warnings
+    from repro.distributed.sharding import (ShardingDropWarning,
+                                            _SANITIZE_WARNED)
+    # sanitize_spec only reads mesh.shape[axis]; a 16-wide stub exercises
+    # the axis widths the 8-device test pool cannot build
+    mesh16 = types.SimpleNamespace(shape={"data": 1, "model": 16})
+    _SANITIZE_WARNED.clear()
+    dropped = []
+    with pytest.warns(ShardingDropWarning, match="REPLICATE"):
+        spec = sanitize_spec(P("model"), (504,), mesh16, dropped=dropped)
+    assert spec == P() and dropped == [0]    # 504 % 16 != 0 -> replicated
+    # one-time: the SAME drop does not warn again (no per-step log spam)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ShardingDropWarning)
+        assert sanitize_spec(P("model"), (504,), mesh16) == P()
+    # mixed spec: only the indivisible KV-head dim (8 % 16) drops, and the
+    # caller is told exactly which one
+    _SANITIZE_WARNED.clear()
+    dropped = []
+    with pytest.warns(ShardingDropWarning):
+        spec = sanitize_spec(P(None, None, None, "model", None),
+                             (2, 4, 16, 8, 32), mesh16, dropped=dropped)
+    assert dropped == [3] and spec == P()
+    # divisible dims keep their sharding and report nothing
+    dropped = []
+    assert sanitize_spec(P("model"), (512,), mesh16,
+                         dropped=dropped) == P("model")
+    assert dropped == []
+
+
+def test_sharding_contexts_isolated_across_interleaved_streams():
+    """Regression: ``activation_sharding`` / ``split_kv_enabled`` are
+    contextvar-backed, so two logically-concurrent streams (e.g. a TP
+    serving thread next to a training trace) interleaved in any order each
+    observe ONLY their own setting — a module-global flag would leak the
+    last writer's value across both."""
+    import contextvars
+    from repro.distributed.sharding import (_ACT_SPEC, activation_sharding,
+                                            split_kv_active, split_kv_enabled)
+    spec_a, spec_b = P("data"), P("model")
+    ctx_a, ctx_b = contextvars.copy_context(), contextvars.copy_context()
+
+    def enter(cm):
+        cm.__enter__()
+        return cm
+
+    # interleave: A enters, B enters different values, both re-checked
+    a_act = ctx_a.run(enter, activation_sharding(spec_a))
+    assert ctx_b.run(_ACT_SPEC.get) is None          # B unaffected by A
+    ctx_b.run(enter, activation_sharding(spec_b))
+    b_kv = ctx_b.run(enter, split_kv_enabled(True))
+    assert ctx_a.run(_ACT_SPEC.get) == spec_a        # A keeps its own
+    assert ctx_b.run(_ACT_SPEC.get) == spec_b
+    assert ctx_a.run(split_kv_active) is False       # B's split-KV private
+    assert ctx_b.run(split_kv_active) is True
+    # A exits while B is still inside: B's values must survive
+    ctx_a.run(a_act.__exit__, None, None, None)
+    assert ctx_a.run(_ACT_SPEC.get) is None
+    assert ctx_b.run(_ACT_SPEC.get) == spec_b
+    assert ctx_b.run(split_kv_active) is True
+    ctx_b.run(b_kv.__exit__, None, None, None)
+    assert ctx_b.run(split_kv_active) is False
+    # this test's contexts are copies: the suite's root context untouched
+    assert _ACT_SPEC.get() is None and split_kv_active() is False

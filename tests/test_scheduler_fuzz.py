@@ -23,6 +23,13 @@ Quantized arms (weight-quant int8/w4a16, int8 KV pool, and both together)
 run the same workloads against sequential QUANTIZED references — greedy
 token identity must survive quantization because every arm dequantizes the
 same codes and the pool quantizes per token slot.
+
+A tensor-parallel arm replays the same workloads through the mesh-sharded
+paged batcher (TP=2 in tier-1; TP=4 on a widened-KV smoke variant in the
+slow tier) across host/device sync x prefix-cache on/off: the column-
+parallel layout (serving/layout.py) never reassociates a reduction, so
+greedy streams must stay BIT-identical to the sequential reference and the
+sharded pool must drain like the single-device pool.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -173,6 +180,68 @@ def test_all_arms_token_identical_and_leak_free(smoke_model, seed):
                 assert 0.0 <= st["acceptance_rate"] <= 1.0
                 assert st["decode_steps"] >= st["spec_rounds"]
         assert not batcher.queue
+
+
+# ------------------------------------------------- tensor-parallel arm ----
+
+def _tp_fuzz(cfg, model, params, tp, sync, prefix, seed):
+    """One fuzz workload through the TP paged batcher: greedy streams must
+    be BIT-IDENTICAL to the sequential single-device reference (the layout
+    only all-gathers output-column slices — no reduction is reassociated)
+    and the sharded pool must drain exactly like the single-device pool."""
+    from repro.launch.mesh import make_host_mesh
+    prompts, budgets, order = _workload(cfg, seed)
+    max_len = max(LEN_PALETTE) + 8 + 1
+    refs = [_reference(model, params, p, m)
+            for p, m in zip(prompts, budgets)]
+    nb = 1 + len(prompts) * -(-max_len // BS)
+    kw = dict(num_blocks=nb, block_size=BS,
+              max_blocks_per_seq=-(-max_len // BS), decode_width=3,
+              buckets=(32, 64), cache_dtype=jnp.float32,
+              mesh=make_host_mesh(1, tp), sync=sync, prefix_cache=prefix)
+    if sync == "device":
+        kw["window"] = 3
+    batcher = PagedBatcher(cfg, params, **kw)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=budgets[i])
+            for i in order]
+    batcher.run(reqs)
+    for r in reqs:
+        assert r.done, (tp, sync, prefix, seed, r.rid)
+        assert r.output == refs[r.rid], (tp, sync, prefix, seed, r.rid)
+    batcher.kv.assert_drained()
+    assert not batcher.busy and not batcher.queue
+    assert batcher.stats()["tp"] == tp
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("seed", [0, pytest.param(1, marks=pytest.mark.slow)])
+@pytest.mark.parametrize("sync,prefix", [("host", False), ("device", False),
+                                         ("host", True), ("device", True)])
+def test_tp2_fuzz_token_identical_and_leak_free(smoke_model, sync, prefix,
+                                                seed):
+    cfg, model, params = smoke_model
+    _tp_fuzz(cfg, model, params, 2, sync, prefix, seed)
+
+
+@pytest.fixture(scope="module")
+def tp4_smoke_model():
+    """TP=4 needs n_kv_heads % 4 == 0: the widened-KV smoke variant."""
+    import jax
+    from repro.models import build_model
+    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
+                                              compute_dtype="float32",
+                                              n_kv_heads=4)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(7))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sync,prefix", [("host", False), ("device", False),
+                                         ("host", True), ("device", True)])
+def test_tp4_fuzz_token_identical_and_leak_free(tp4_smoke_model, sync,
+                                                prefix):
+    cfg, model, params = tp4_smoke_model
+    _tp_fuzz(cfg, model, params, 4, sync, prefix, seed=0)
 
 
 # ----------------------------------------------------- quantized serving --

@@ -1,0 +1,160 @@
+"""Tensor-parallel paged serving: bit-identical token streams over a mesh.
+
+The ``MeshLayout`` sharding plan (serving/layout.py) splits every weight on
+its OUTPUT axis and concatenates shard slices with tiled all-gathers, so TP
+is an execution schedule, never a numerics change: greedy token streams
+from the TP=2 / TP=4 paged batcher must be BIT-IDENTICAL to the
+single-device batcher — across standalone prefill, per-token host-synced
+decode, fused decode windows (the shard_mapped step as the scan body),
+stage-parallel mixed batching, speculative verify, prefix caching and both
+quantized formats (int8 pool slot scales use a global-amax pmax, which is
+max-of-maxes exact). Host bookkeeping is device-agnostic: every arm must
+drain its pool exactly like the single-device arm.
+
+Runs on the 8 virtual CPU devices conftest.py configures via
+``--xla_force_host_platform_device_count``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.serving.scheduler import PagedBatcher, Request
+from repro.serving.spec import SpecConfig
+
+BS = 16
+N_NEW = 8
+PROMPT_LENS = (5, 12, 33)       # straddles block and bucket boundaries
+
+
+def _prompts(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+            for n in PROMPT_LENS]
+
+
+def _run(cfg, params, mesh=None, **kw):
+    """One closed-loop serve through the paged batcher; returns rid->tokens
+    and asserts the pool drained (TP must not change host bookkeeping)."""
+    b = PagedBatcher(cfg, params, num_blocks=40, block_size=BS,
+                     max_blocks_per_seq=4, decode_width=3, buckets=(16, 32),
+                     cache_dtype=jnp.float32, mesh=mesh, **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=N_NEW)
+            for i, p in enumerate(_prompts(cfg))]
+    b.run(reqs)
+    for r in reqs:
+        assert r.done, r.rid
+    b.kv.assert_drained()
+    assert not b.busy and not b.queue
+    return b, {r.rid: tuple(r.output) for r in reqs}
+
+
+# arm name -> PagedBatcher kwargs; each TP run is compared against a
+# single-device run of the SAME arm (quant arms change numerics, so the
+# reference must be the quantized single-device batcher)
+ARMS = {
+    "host": dict(sync="host"),
+    "device": dict(sync="device", window=3),
+    "mixed": dict(sync="device", window=3, mixed_batch=True),
+    "prefix_cache": dict(sync="host", prefix_cache=True),
+    "spec_self": dict(sync="host", spec=SpecConfig(k=2)),
+    "w4a16_kv_int8": dict(sync="device", window=3, weight_quant="w4a16",
+                          kv_quant="int8"),
+    "w_int8": dict(sync="host", weight_quant="int8"),
+    "kv_int8": dict(sync="host", kv_quant="int8"),
+}
+SLOW_ARMS = {"w_int8", "kv_int8"}        # formats already covered combined
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("arm", [
+    a if a not in SLOW_ARMS else pytest.param(a, marks=pytest.mark.slow)
+    for a in sorted(ARMS)])
+def test_tp2_arms_bit_identical_to_single_device(smoke_model, arm):
+    cfg, _, params = smoke_model
+    kw = ARMS[arm]
+    _, ref = _run(cfg, params, **kw)
+    b, tp = _run(cfg, params, mesh=make_host_mesh(1, 2), **kw)
+    assert tp == ref, arm
+    assert b.stats()["tp"] == 2
+    if arm == "spec_self":
+        st = b.stats()
+        assert st["verify_dispatches"] > 0
+        assert 0.0 <= st["acceptance_rate"] <= 1.0
+    if arm == "prefix_cache":
+        # replay: warm hits must route through the SHARDED pool's CoW path
+        b2, tp2 = _run(cfg, params, mesh=make_host_mesh(1, 2), **kw)
+        assert tp2 == ref and b2.stats() is not None
+
+
+@pytest.fixture(scope="module")
+def tp4_model():
+    """TP=4 needs n_kv_heads % 4 == 0 — the widened-KV smoke variant."""
+    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
+                                              compute_dtype="float32",
+                                              n_kv_heads=4)
+    model = build_model(cfg)
+    return cfg, model.init(jax.random.PRNGKey(7))
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("arm", ["host", "device"])
+def test_tp4_bit_identical_to_single_device(tp4_model, arm):
+    cfg, params = tp4_model
+    _, ref = _run(cfg, params, **ARMS[arm])
+    b, tp = _run(cfg, params, mesh=make_host_mesh(1, 4), **ARMS[arm])
+    assert tp == ref
+    assert b.stats()["tp"] == 4
+
+
+@pytest.mark.tier1
+def test_tp_actually_shards_weights_and_pool(smoke_model):
+    """Placement is real, not cosmetic: column-sharded weights and the KV
+    pool land with a 'model' entry in their sharding spec; norms, embed and
+    the int8 scale planes replicate (the docs' shards-vs-replicates table)."""
+    cfg, _, params = smoke_model
+    mesh = make_host_mesh(1, 2)
+    b = PagedBatcher(cfg, params, num_blocks=40, block_size=BS,
+                     max_blocks_per_seq=4, decode_width=3, buckets=(16, 32),
+                     cache_dtype=jnp.float32, mesh=mesh, kv_quant="int8")
+
+    def spec_of(leaf):
+        return tuple(leaf.sharding.spec)
+
+    flat = jax.tree_util.tree_flatten_with_path(b.params)[0]
+    by_path = {"/".join(str(k.key) for k in p
+                        if isinstance(k, jax.tree_util.DictKey)): v
+               for p, v in flat}
+    # column-sharded sites carry 'model' on their LAST axis
+    for name in ("attn/wq", "attn/wo", "ffn/w_gate", "ffn/w_down"):
+        hits = [v for k, v in by_path.items() if k.endswith(name)]
+        assert hits, name
+        for v in hits:
+            assert spec_of(v)[-1] == "model", name
+    # embed and norms replicate
+    for k, v in by_path.items():
+        if k == "embed" or k.endswith("norm") or "norm/" in k:
+            assert "model" not in spec_of(v), k
+    # pool: KV heads shard (axis 3), int8 slot-scale planes replicate
+    assert b.kv.pool["k"].sharding.spec[3] == "model"
+    assert "model" not in tuple(b.kv.pool["k_scale"].sharding.spec)
+
+
+@pytest.mark.tier1
+def test_tp_validation_errors(smoke_model):
+    cfg, _, params = smoke_model
+    kw = dict(num_blocks=40, block_size=BS, decode_width=3,
+              buckets=(16, 32), cache_dtype=jnp.float32)
+    # n_kv_heads=2 cannot split 4 ways
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        PagedBatcher(cfg, params, mesh=make_host_mesh(1, 4), **kw)
+    # the hetero engine and the mesh are separate axes of the machine
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        PagedBatcher(cfg, params, mesh=make_host_mesh(1, 2),
+                     engine_mode="hetero-tensor", **kw)
+    # a mesh without a 'model' axis names no TP width
+    with pytest.raises(ValueError, match="model"):
+        PagedBatcher(cfg, params, mesh=jax.make_mesh((2,), ("x",)), **kw)
