@@ -1,0 +1,146 @@
+"""Observability harness benchmark: tracing determinism, counter/trace
+reconciliation across scheduler arms, and the solver plan-drift report.
+
+Every other benchmark measures the serving stack; this one measures the
+INSTRUMENT. Under ``FakeClock`` + a deterministic ``cost_model`` (virtual
+dispatch costs derived from the solver's own predictions), the tracer must
+behave as a measuring device CI can pin:
+
+  * ``identical_reruns``  — the same arm traced twice produces BYTE-identical
+    Chrome trace JSON and Prometheus snapshots (the artifact-determinism
+    contract tier-1 relies on);
+  * per-arm reconciliation — on host-sync, fused-window and mixed arms the
+    tracer's mirrored counters equal the scheduler's ``stats()`` ledger
+    exactly, and per-kind B-event counts equal the dispatch counters;
+  * ``drift_rows``        — the engine-mode arm's plan-drift report carries a
+    (site, M, strategy) residual row for every solver decision exercised;
+  * ``overhead_off``      — with tracing off (the default NULL_TRACER) the
+    run records ZERO events and emits token streams identical to the traced
+    run (observation only, in both directions).
+
+Rows: ``observability.<arm>.{events,dispatches,drift_rows}`` plus the
+determinism/overhead booleans. ``BENCH_observability.json`` carries the
+full drift report of the engine-mode arm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving.scheduler import PagedBatcher, Request
+from repro.serving.telemetry import FakeClock
+from repro.serving.trace import NULL_TRACER, Tracer, counter_reconciliation
+
+BS = 16
+N_REQ = 4
+PROMPT_LENS = (11, 26, 40, 18)
+BUDGETS = (6, 4, 7, 5)
+
+ARMS = {
+    "host": dict(sync="host", engine_mode="hetero-tensor"),
+    "device_window": dict(sync="device", window=3,
+                          engine_mode="hetero-tensor"),
+    "mixed": dict(sync="device", window=3, mixed_batch=True,
+                  engine_mode="hetero-tensor"),
+}
+
+
+def _cost_model(kind, predicted_us):
+    return max(predicted_us, 10.0) * 1e-6
+
+
+def _run(cfg, params, *, tracer, **kw):
+    max_len = max(PROMPT_LENS) + max(BUDGETS) + 1
+    pb = PagedBatcher(cfg, params,
+                      num_blocks=1 + N_REQ * -(-max_len // BS),
+                      block_size=BS, max_blocks_per_seq=-(-max_len // BS),
+                      decode_width=3, buckets=(32, 64),
+                      cache_dtype=jnp.float32, tracer=tracer, **kw)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, s
+                                        ).astype(np.int32),
+                    max_new_tokens=m)
+            for i, (s, m) in enumerate(zip(PROMPT_LENS, BUDGETS))]
+    pb.run(reqs)
+    pb.kv.assert_drained()
+    return pb, [list(r.output) for r in reqs]
+
+
+def main() -> None:
+    cfg = get_smoke_config("llama3-8b").with_(param_dtype="float32",
+                                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    metrics: dict = {}
+
+    outputs = {}
+    drift_report = None
+    for arm, kw in ARMS.items():
+        tracer = Tracer(FakeClock(), cost_model=_cost_model)
+        pb, out = _run(cfg, params, tracer=tracer, **kw)
+        outputs[arm] = out
+        st = pb.stats()
+        mism = counter_reconciliation(tracer, st)
+        assert mism == {}, f"{arm}: tracer/stats ledgers diverged: {mism}"
+        by_kind = {}
+        for e in tracer.events:
+            if e["ph"] == "B" and e.get("cat") == "dispatch":
+                by_kind[e["name"]] = by_kind.get(e["name"], 0) + 1
+        assert by_kind.get("prefill_chunk", 0) == st["prefill_dispatches"]
+        assert sum(by_kind.get(k, 0) for k in
+                   ("decode_step", "decode_window", "mixed_step",
+                    "mixed_window", "paged_verify")) \
+            == st["decode_dispatches"], (arm, by_kind)
+        assert tracer.dropped == 0
+        n_rows = len(tracer.drift.report()["rows"])
+        plan_sites = {s for (s, _) in pb.ctx.plan.decisions}
+        assert {r["site"] for r in tracer.drift.report()["rows"]} \
+            == plan_sites, arm
+        emit(f"observability.{arm}.events", tracer.n_events,
+             f"dispatches={sum(by_kind.values())};drift_rows={n_rows}")
+        metrics[arm] = {"events": tracer.n_events,
+                        "dispatches": sum(by_kind.values()),
+                        "drift_rows": n_rows,
+                        "reconciled": True}
+        if arm == "device_window":
+            drift_report = tracer.drift.report()
+            print(tracer.drift.format_table())
+
+    # determinism: trace the device arm twice -> byte-identical artifacts
+    # (serialize exactly as save_chrome does, compared in memory)
+    import json
+    blobs, proms = [], []
+    for _ in range(2):
+        tracer = Tracer(FakeClock(), cost_model=_cost_model)
+        _run(cfg, params, tracer=tracer, **ARMS["device_window"])
+        blobs.append(json.dumps(tracer.to_chrome(), sort_keys=True,
+                                separators=(",", ":")) + "\n")
+        proms.append(tracer.to_prometheus())
+    assert blobs[0] == blobs[1], "trace artifact not byte-reproducible"
+    assert proms[0] == proms[1], "metrics snapshot not byte-reproducible"
+    emit("observability.rerun.identical", 1,
+         f"trace_bytes={len(blobs[0])}")
+    metrics["identical_reruns"] = {"trace_bytes": len(blobs[0]),
+                                   "prom_bytes": len(proms[0])}
+
+    # tracing off: the default batcher records nothing and emits the same
+    # tokens as the traced arm
+    pb_off, out_off = _run(cfg, params, tracer=None, **ARMS["device_window"])
+    assert pb_off.tracer is NULL_TRACER
+    assert out_off == outputs["device_window"], (
+        "tracing changed token output")
+    emit("observability.off.events", 0, "null_tracer")
+    metrics["overhead_off"] = {"events": 0,
+                              "tokens_identical": True}
+
+    emit_json("observability", {**metrics,
+                                "drift": drift_report})
+
+
+if __name__ == "__main__":
+    main()

@@ -6,13 +6,32 @@ trajectory artifact CI and the aggregator (`benchmarks/run.py`) consume."""
 from __future__ import annotations
 
 import json
+import subprocess
 import time
+from functools import lru_cache
 from pathlib import Path
 
 import jax
 import numpy as np
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# bump when the BENCH_*.json payload shape changes so trajectory tooling
+# can tell apart artifacts written by different repo generations
+SCHEMA_VERSION = 1
+
+
+@lru_cache(maxsize=1)
+def git_sha() -> str:
+    """Short SHA of the repo HEAD, or ``"unknown"`` outside a checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+    except OSError:
+        return "unknown"
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else "unknown"
 
 # rows emitted since the last emit_json() call: emit() records every CSV row
 # here so benches don't have to thread their results twice
@@ -54,6 +73,8 @@ def emit_json(name: str, metrics: dict | None = None) -> Path:
     rows, _ROWS = _ROWS, []
     path = REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(
-        {"bench": name, "metrics": metrics or {}, "rows": rows}, indent=1))
+        {"bench": name, "schema_version": SCHEMA_VERSION,
+         "git_sha": git_sha(), "metrics": metrics or {}, "rows": rows},
+        indent=1))
     _WRITTEN.append(path)
     return path

@@ -34,6 +34,7 @@ MODULES = [
     "benchmarks.bench_open_loop",         # open-loop TTFT/TPOT percentiles
     "benchmarks.bench_quant",             # quantized weights + int8 KV pool
     "benchmarks.bench_tp",                # tensor-parallel paged serving
+    "benchmarks.bench_observability",     # tracing determinism + plan drift
     "benchmarks.roofline_report",         # §Roofline
 ]
 
@@ -48,7 +49,9 @@ def aggregate() -> dict:
         data = json.loads(path.read_text())
         benches[data["bench"]] = {"metrics": data["metrics"],
                                   "n_rows": len(data["rows"])}
-    summary = {"benches": benches, "n_benches": len(benches)}
+    summary = {"benches": benches, "n_benches": len(benches),
+               "schema_version": common.SCHEMA_VERSION,
+               "git_sha": common.git_sha()}
     (REPO_ROOT / "BENCH_summary.json").write_text(
         json.dumps(summary, indent=1))
     return summary

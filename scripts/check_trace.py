@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""CI gate for Chrome trace-event artifacts written by ``serving/trace.py``.
+
+Structural invariants a well-formed trace must satisfy — Perfetto is
+forgiving, so a trace can "load" while being subtly wrong; this checker
+is not:
+
+1. schema — top-level ``traceEvents`` list; every event carries ``ph``,
+   ``pid``, ``tid``, and (except metadata) an integer ``ts``.
+2. monotone timestamps — ``ts`` never decreases in file order (metadata
+   "M" events excluded). The tracer emits in clock order; a violation
+   means a span closed with a stale timestamp.
+3. paired B/E — per (pid, tid), duration events nest like a bracket
+   sequence: every "E" matches the innermost open "B" by name, nothing
+   left open at EOF, and E.ts >= B.ts.
+4. resolvable flows — every flow step/finish ("t"/"f") follows a start
+   ("s") with the same id and cat, and every start is eventually
+   finished ("f"), so request arrows never dangle in the viewer.
+
+Usage:  python scripts/check_trace.py trace.json
+Importable: ``validate(trace_dict) -> list[str]`` (empty == clean).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+_PHASES_NEED_TS = {"B", "E", "i", "s", "t", "f", "X", "C"}
+
+
+def validate(trace: dict) -> list[str]:
+    """Return a list of violation messages (empty when the trace is clean)."""
+    errors: list[str] = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["top-level 'traceEvents' missing or not a list"]
+
+    last_ts: int | None = None
+    open_spans: dict[tuple, list[tuple[str, int]]] = {}   # (pid,tid) -> stack
+    flow_started: dict[tuple, int] = {}    # (cat, id) -> start index
+    flow_finished: set[tuple] = set()
+
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph is None:
+            errors.append(f"event {i}: missing 'ph'")
+            continue
+        if "pid" not in ev or "tid" not in ev:
+            errors.append(f"event {i} ({ph!r}): missing pid/tid")
+            continue
+        if ph == "M":
+            continue            # metadata carries no timestamp
+        ts = ev.get("ts")
+        if ph in _PHASES_NEED_TS and not isinstance(ts, int):
+            errors.append(f"event {i} ({ph!r} {ev.get('name')!r}): "
+                          f"non-integer ts {ts!r}")
+            continue
+        if last_ts is not None and ts < last_ts:
+            errors.append(f"event {i} ({ph!r} {ev.get('name')!r}): ts {ts} "
+                          f"< previous {last_ts} (non-monotone)")
+        last_ts = ts
+
+        key = (ev["pid"], ev["tid"])
+        if ph == "B":
+            open_spans.setdefault(key, []).append((ev.get("name", ""), ts))
+        elif ph == "E":
+            stack = open_spans.get(key)
+            if not stack:
+                errors.append(f"event {i}: 'E' {ev.get('name')!r} on "
+                              f"{key} with no open 'B'")
+                continue
+            b_name, b_ts = stack.pop()
+            e_name = ev.get("name", "")
+            if e_name and e_name != b_name:
+                errors.append(f"event {i}: 'E' name {e_name!r} does not "
+                              f"match open 'B' {b_name!r} on {key}")
+            if ts < b_ts:
+                errors.append(f"event {i}: 'E' {e_name!r} ts {ts} before "
+                              f"its 'B' ts {b_ts}")
+        elif ph in ("s", "t", "f"):
+            fkey = (ev.get("cat"), ev.get("id"))
+            if ev.get("id") is None:
+                errors.append(f"event {i}: flow {ph!r} without 'id'")
+                continue
+            if ph == "s":
+                flow_started.setdefault(fkey, i)
+            else:
+                if fkey not in flow_started:
+                    errors.append(f"event {i}: flow {ph!r} id={fkey[1]} "
+                                  f"cat={fkey[0]!r} has no preceding 's'")
+                if ph == "f":
+                    flow_finished.add(fkey)
+
+    for key, stack in open_spans.items():
+        for name, ts in stack:
+            errors.append(f"unclosed 'B' {name!r} on {key} (ts {ts})")
+    for fkey, idx in flow_started.items():
+        if fkey not in flow_finished:
+            errors.append(f"flow id={fkey[1]} cat={fkey[0]!r} started at "
+                          f"event {idx} but never finished ('f')")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print("usage: check_trace.py <trace.json>", file=sys.stderr)
+        return 2
+    with open(argv[1]) as f:
+        trace = json.load(f)
+    errors = validate(trace)
+    n = len(trace.get("traceEvents", []))
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}")
+        print(f"check_trace: {len(errors)} violations in {n} events")
+        return 1
+    print(f"check_trace: OK ({n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

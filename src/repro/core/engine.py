@@ -73,6 +73,46 @@ def build_hetero_ctx(cfg, mode: str, *, sync_mode: str = "fast",
     return HeteroCtx(mode=mode, plan=plan, interpret=interpret)
 
 
+def dispatch_prediction(plan, cfg, *, m=None, steps: int = 1,
+                        mixed=None, verify=None):
+    """Decision tags + predicted duration for ONE scheduler dispatch.
+
+    Returns ``(tags, total_us)`` where tags is a tuple of
+    ``(site, M, strategy, t_us, count)`` — one per partitionable site —
+    and ``count`` folds in how many times that site's matmul runs inside
+    the dispatch: ``steps`` forward passes, each hitting every
+    non-``head`` site ``cfg.n_layers`` times and ``head`` once (mirroring
+    :meth:`InferenceEngine.predicted_prefill_us`). Exactly one shape
+    selector applies: ``m`` (plain M-token dispatch, nearest-grid-M
+    lookup — decode widths and off-bucket chunks resolve the same way
+    HeteroCtx picks kernels), ``mixed=(m_prefill, m_decode)`` (fused
+    stage-parallel step) or ``verify=(k, lanes)`` (spec verification).
+    The serving tracer attaches these tags to each dispatch span and the
+    drift aggregator scores them against measured durations. ``plan=None``
+    (no engine mode, no solver) yields ``((), 0.0)`` — untagged spans."""
+    if plan is None:
+        return (), 0.0
+    sites = sorted({s for (s, _) in plan.decisions})
+    tags, total = [], 0.0
+    for site in sites:
+        if verify is not None:
+            k, lanes = verify
+            dec = plan.verify_decision(site, k, lanes) \
+                or plan.lookup(site, lanes * (k + 1))
+        elif mixed is not None:
+            mp, md = mixed
+            dec = plan.mixed_decision(site, mp, md) \
+                or plan.lookup(site, mp + md)
+        else:
+            dec = plan.lookup(site, 1 if m is None else m)
+        if dec is None:
+            continue
+        count = steps * (1 if site == "head" else cfg.n_layers)
+        tags.append((site, dec.M, dec.strategy, dec.t_us, count))
+        total += dec.t_us * count
+    return tuple(tags), total
+
+
 @dataclass
 class EngineStats:
     prefill_s: float = 0.0

@@ -103,6 +103,20 @@ class PartitionPlan:
                         lanes: int = 1) -> Optional[Decision]:
         return self.verify_decisions.get((site, k, lanes))
 
+    def lookup(self, site: str, M: int) -> Optional[Decision]:
+        """The decision governing an M-token dispatch at ``site``: exact
+        when M is on the solve grid, else the nearest solved M — the SAME
+        fallback HeteroCtx uses to pick a kernel at run time, so trace
+        decision tags name the decision that actually executed. None when
+        the plan has no decisions for the site."""
+        dec = self.decisions.get((site, M))
+        if dec is not None:
+            return dec
+        ms = sorted({m for (s, m) in self.decisions if s == site})
+        if not ms:
+            return None
+        return self.decisions[(site, min(ms, key=lambda m: abs(m - M)))]
+
     def save(self, path):
         Path(path).write_text(json.dumps({
             "arch": self.arch, "sync_mode": self.sync_mode,

@@ -135,6 +135,18 @@ def main(argv=None):
                          "(paged mode; needs N visible devices)")
     ap.add_argument("--stats", action="store_true",
                     help="print the scheduler's stats() counter dict")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    dest="trace_out",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(Perfetto-loadable; batched mode)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    dest="metrics_out",
+                    help="write a Prometheus-style text snapshot of the "
+                         "run's counters/gauges/histograms (batched mode)")
+    ap.add_argument("--plan-drift", action="store_true", dest="plan_drift",
+                    help="print the solver plan-vs-actual drift table "
+                         "(predicted vs observed us per (site, M, strategy);"
+                         " needs --engine-mode for decision tags)")
     ap.add_argument("--open-loop", action="store_true", dest="open_loop",
                     help="open-loop serving: requests arrive on a seeded "
                          "schedule (--arrival/--rate) instead of all at t=0")
@@ -190,6 +202,10 @@ def main(argv=None):
                  "add --batched --paged")
     if not 0.0 <= args.priority_mix <= 1.0:
         ap.error("--priority-mix must be in [0, 1]")
+    if (args.trace_out or args.metrics_out or args.plan_drift) \
+            and not args.batched:
+        ap.error("--trace-out / --metrics-out / --plan-drift trace the "
+                 "batched servers: add --batched")
 
     import jax
     from repro.configs import get_config, get_smoke_config
@@ -198,7 +214,14 @@ def main(argv=None):
 
     if args.batched:
         from repro.serving.scheduler import ContinuousBatcher, PagedBatcher
+        from repro.serving.telemetry import MonotonicClock
+        from repro.serving.trace import Tracer
         max_len = args.prompt_len + args.new_tokens + 8
+        # all serving timing flows through the injectable clock: the same
+        # Telemetry machinery the deterministic tests pin, on a wall clock
+        clock = MonotonicClock()
+        tracing = bool(args.trace_out or args.metrics_out or args.plan_drift)
+        tracer = Tracer(clock) if tracing else None
         if args.paged:
             spec = None
             if args.spec_k is not None:
@@ -226,7 +249,8 @@ def main(argv=None):
                               max_prefill_chunk_per_step=args.max_prefill_chunk,
                               spec=spec, prefix_cache=args.prefix_cache,
                               weight_quant=args.weight_quant,
-                              kv_quant=args.kv_quant, mesh=mesh)
+                              kv_quant=args.kv_quant, mesh=mesh,
+                              tracer=tracer)
             label = (f"paged (bs={args.block_size}, "
                      f"blocks={num_blocks}, W={args.decode_width}, "
                      f"sync={args.sync}"
@@ -244,7 +268,8 @@ def main(argv=None):
                         f"draft={args.spec_draft or 'self'}"
                         if spec else "") + ")")
         else:
-            cb = ContinuousBatcher(cfg, max_batch=4, max_len=max_len)
+            cb = ContinuousBatcher(cfg, max_batch=4, max_len=max_len,
+                                   tracer=tracer)
             label = "batched"
         if args.shared_prefix >= args.prompt_len - 8:
             ap.error("--shared-prefix must leave at least 8 tokens of "
@@ -258,12 +283,8 @@ def main(argv=None):
                                       - args.shared_prefix)
                          ).astype(np.int32)])
             for _ in range(args.requests)]
-        # all serving timing flows through the injectable clock: the same
-        # Telemetry machinery the deterministic tests pin, on a wall clock
         from repro.serving.ingress import AsyncServer, arrival_times, \
             open_loop_workload
-        from repro.serving.telemetry import MonotonicClock
-        clock = MonotonicClock()
         server = AsyncServer(cb, clock=clock,
                              admit_watermark=args.watermark)
         prios = [0 if rng.random() < args.priority_mix else 1
@@ -320,6 +341,16 @@ def main(argv=None):
                       f"{s['cow_copies']} CoW copies")
         if args.stats:
             print(f"  stats: {server.stats()}")
+        if tracer is not None:
+            if args.trace_out:
+                tracer.save_chrome(args.trace_out)
+                print(f"  trace: {tracer.n_events} events "
+                      f"({tracer.dropped} dropped) -> {args.trace_out}")
+            if args.metrics_out:
+                tracer.save_prometheus(args.metrics_out)
+                print(f"  metrics: -> {args.metrics_out}")
+            if args.plan_drift:
+                print(tracer.drift.format_table())
         return
 
     from repro.core.engine import InferenceEngine

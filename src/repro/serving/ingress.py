@@ -52,6 +52,7 @@ import numpy as np
 
 from .scheduler import ContinuousBatcher, PagedBatcher, Request
 from .telemetry import Clock, MonotonicClock, Telemetry
+from .trace import NULL_TRACER
 
 __all__ = [
     "AsyncServer", "RequestHandle", "poisson_arrivals", "burst_arrivals",
@@ -188,7 +189,7 @@ class AsyncServer:
                  telemetry: Telemetry | None = None,
                  admit_watermark: int = 0, preempt: bool = True,
                  step_time_s: float | None = None,
-                 max_ticks: int = 100_000):
+                 max_ticks: int = 100_000, tracer=None):
         if not isinstance(batcher, (PagedBatcher, ContinuousBatcher)):
             raise TypeError(f"unsupported batcher {type(batcher).__name__}")
         self.batcher = batcher
@@ -204,6 +205,10 @@ class AsyncServer:
                              "(FakeClock); a wall clock advances itself")
         self.telemetry = (telemetry if telemetry is not None
                           else Telemetry(self.clock))
+        # default to the batcher's tracer so one Tracer sees the whole
+        # lifecycle: ingress events land beside the dispatches they caused
+        self.tracer = (tracer if tracer is not None
+                       else getattr(batcher, "tracer", NULL_TRACER))
         self.admit_watermark = admit_watermark
         self.preempt_enabled = preempt and self.paged
         self.step_time_s = step_time_s
@@ -243,6 +248,10 @@ class AsyncServer:
         self._entries[rid] = entry
         self._order.append(entry)
         self.telemetry.on_enqueue(rid, priority=priority, at=at)
+        self.tracer.request_event("enqueue", rid, at=at,
+                                  args={"priority": priority,
+                                        "prompt_tokens": int(prompt.size),
+                                        "max_new_tokens": max_new_tokens})
         return handle
 
     @property
@@ -298,16 +307,21 @@ class AsyncServer:
                 ok = free_lanes > 0
             if not ok:
                 self.deferrals += 1
+                self.tracer.count("ingress_deferrals")
                 if self._try_preempt(entry):
                     self.preemptions += 1
+                    self.tracer.count("ingress_preemptions")
                 break                    # strict priority FCFS
             req = Request(rid=entry.rid, prompt=prompt,
                           max_new_tokens=budget)
             b.submit(req)
+            resumed = bool(entry.emitted)
             entry.cur_req = req
             entry.streamed = 0
             entry.state = "running"
             self.telemetry.on_admit(entry.rid)
+            self.tracer.request_event("resume" if resumed else "admit",
+                                      entry.rid)
             free_lanes -= 1
             virtual_free -= need
             admitted += 1
@@ -339,6 +353,9 @@ class AsyncServer:
         victim.cur_req = None
         victim.state = "queued"
         self.telemetry.on_preempt(victim.rid)
+        self.tracer.request_event("preempt", victim.rid,
+                                  args={"by": blocked.rid,
+                                        "lane": lane_idx})
         return True
 
     # ------------------------------------------------------------ the loop --
@@ -358,19 +375,24 @@ class AsyncServer:
             if req.done:
                 entry.state = "done"
                 self.telemetry.on_finish(entry.rid)
+                self.tracer.request_event(
+                    "finish", entry.rid,
+                    args={"tokens": len(entry.emitted)})
                 entry.handle._finish()
 
     def _tick(self) -> bool:
         """One scheduler iteration: admit -> step -> drain. Returns True if
         anything progressed (admission or batcher work)."""
         self.ticks += 1
-        admitted = self._admit_phase()
-        progressed = False
-        if self.batcher.busy:
-            progressed = bool(self.batcher.step())
-            if self.step_time_s is not None and (progressed or admitted):
-                self.clock.advance(self.step_time_s)
-        self._drain_phase()
+        self.tracer.count("ingress_ticks")
+        with self.tracer.span("tick", track="ingress"):
+            admitted = self._admit_phase()
+            progressed = False
+            if self.batcher.busy:
+                progressed = bool(self.batcher.step())
+                if self.step_time_s is not None and (progressed or admitted):
+                    self.clock.advance(self.step_time_s)
+            self._drain_phase()
         return bool(admitted) or progressed
 
     @property

@@ -239,8 +239,10 @@ class PagedKVCache:
     def __init__(self, cfg, *, num_blocks: int, block_size: int = 32,
                  max_blocks_per_seq: int | None = None, dtype=jnp.bfloat16,
                  prefix_cache: bool = False, kv_quant: str | None = None,
-                 layout=None):
+                 layout=None, tracer=None):
         from repro.models import transformer
+        from .trace import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
@@ -326,6 +328,7 @@ class PagedKVCache:
             self.allocator.free(plain)
         for b in self.allocator.retire(registered):
             self._lru[b] = None                  # most-recently-retired last
+        self.tracer.gauge("cached_blocks", self.allocator.n_cached)
 
     def _reclaim(self, n: int) -> None:
         """Evict up to ``n`` refcount-0 cached blocks, least recently used
@@ -337,7 +340,11 @@ class PagedKVCache:
             del self._block_of_hash[h]
             self.allocator.evict([b])
             self.evictions += 1
+            self.tracer.count("evictions")
+            self.tracer.instant("prefix_evict", track="cache", cat="cache",
+                                args={"block": b})
             n -= 1
+        self.tracer.gauge("cached_blocks", self.allocator.n_cached)
 
     def _alloc(self, n: int) -> list[int]:
         """Allocate ``n`` fresh blocks, evicting cached blocks on pressure."""
@@ -380,11 +387,20 @@ class PagedKVCache:
             self._release([src])                 # drop the pin
             seq.append_block(dst)
             self.cow_copies += 1
+            self.tracer.count("cow_copies")
+            self.tracer.instant("prefix_cow", track="cache", cat="cache",
+                                args={"src": src, "dst": dst})
             seq.cached_tokens = prompt_tokens - 1
         else:
             seq.cached_tokens = len(hits) * bs
         self.prefix_hits += 1
         self.prefix_tokens_reused += seq.cached_tokens
+        self.tracer.count("prefix_hits")
+        self.tracer.count("prefix_tokens_reused", seq.cached_tokens)
+        self.tracer.instant("prefix_hit", track="cache", cat="cache",
+                            args={"blocks": len(hits),
+                                  "tokens": seq.cached_tokens})
+        self.tracer.gauge("cached_blocks", self.allocator.n_cached)
 
     # ---------------------------------------------------------- lifecycle --
     def open_sequence(self, prompt_tokens: int, total_tokens: int,

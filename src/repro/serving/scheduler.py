@@ -66,6 +66,7 @@ from repro.models import build_model
 from .paged_cache import PagedKVCache, SequenceBlocks
 from .sampler import SamplerConfig, greedy_verify, sample
 from .spec import DraftLanes, SpecConfig
+from .trace import NULL_TRACER
 
 
 def bucket_chunks(S: int, buckets: tuple) -> list[int]:
@@ -109,8 +110,9 @@ class ContinuousBatcher:
     def __init__(self, cfg, params=None, *, max_batch: int = 4,
                  max_len: int = 512, buckets=(64, 128, 256),
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
-                 weight_quant: str | None = None):
+                 weight_quant: str | None = None, tracer=None):
         assert cfg.moe is None or True
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -164,10 +166,15 @@ class ContinuousBatcher:
                 logits, idx = None, 0
                 for c in bucket_chunks(S, self.buckets):
                     piece = jnp.asarray(req.prompt[idx: idx + c], jnp.int32)
-                    logits, self.cache = self._prefill_piece(
-                        self.params, self.cache, piece,
-                        jnp.asarray(b), jnp.asarray(idx, jnp.int32), chunk=c)
+                    with self.tracer.dispatch(
+                            "prefill_chunk", track="prefill",
+                            args={"rid": req.rid, "chunk": c, "start": idx}):
+                        logits, self.cache = self._prefill_piece(
+                            self.params, self.cache, piece,
+                            jnp.asarray(b), jnp.asarray(idx, jnp.int32),
+                            chunk=c)
                     self.prefill_dispatches += 1
+                    self.tracer.count("prefill_dispatches")
                     idx += c
                 self.cache["index"] = self.cache["index"].at[b].set(S)
                 self.lengths[b] = S
@@ -186,15 +193,19 @@ class ContinuousBatcher:
         self._admit()
         active = [b for b in range(self.B) if self.slots[b] is not None]
         self.peak_active = max(self.peak_active, len(active))
+        self.tracer.gauge("peak_active", self.peak_active)
         if not active:
             return False
         last = np.zeros((self.B, 1), np.int32)
         for b in active:
             last[b, 0] = self.slots[b].output[-1]
         # decode_step itself advances every slot's index by one
-        logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(last), self.cache)
+        with self.tracer.dispatch("decode_step", track="decode",
+                                  args={"active": len(active)}):
+            logits, self.cache = self._decode(self.params,
+                                              jnp.asarray(last), self.cache)
         self.decode_dispatches += 1
+        self.tracer.count("decode_dispatches")
         self.rng, k = jax.random.split(self.rng)
         toks = np.asarray(sample(logits[:, -1, :], k, self.sampler))
         for b in active:
@@ -203,6 +214,7 @@ class ContinuousBatcher:
             self.budget[b] -= 1
             self.lengths[b] += 1
             self.decode_steps += 1
+            self.tracer.count("decode_steps")
             if self.budget[b] <= 0 or self.lengths[b] + 1 >= self.S:
                 req.done = True
                 self.slots[b] = None           # free slot; queue backfills
@@ -341,7 +353,7 @@ class PagedBatcher:
                  prefix_cache: bool = False,
                  weight_quant: str | None = None,
                  kv_quant: str | None = None,
-                 mesh=None):
+                 mesh=None, tracer=None):
         if sync not in ("host", "device"):
             raise ValueError(f"sync must be 'host' or 'device', got {sync!r}")
         if mesh is not None and engine_mode is not None:
@@ -398,11 +410,15 @@ class PagedBatcher:
         from repro.serving.layout import make_layout
         self.mesh = mesh
         self.layout = make_layout(cfg, mesh)
+        # observability: NULL_TRACER (shared no-op) unless the caller wires
+        # a live Tracer — the pool and draft lanes record into the same one
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.kv = PagedKVCache(
             cfg, num_blocks=num_blocks, block_size=block_size,
             max_blocks_per_seq=max_blocks_per_seq,
             dtype=fp_dtype, prefix_cache=prefix_cache, kv_quant=kv_quant,
-            layout=self.layout if mesh is not None else None)
+            layout=self.layout if mesh is not None else None,
+            tracer=self.tracer)
         self.W = decode_width
         self.buckets = tuple(sorted(buckets))
         self.sampler = sampler
@@ -457,6 +473,9 @@ class PagedBatcher:
                 interpret=interpret)
         else:
             self.ctx = None
+        # the solved plan (None without an engine mode) backs the tracer's
+        # dispatch decision tags and the plan-drift report
+        self._plan = self.ctx.plan if self.ctx is not None else None
         # observability: host dispatches actually issued vs tokens produced —
         # the fused-window win is decode dispatches << decode steps; the
         # mixed-batch win is prefill chunks riding decode dispatches for free
@@ -494,7 +513,8 @@ class PagedBatcher:
                 draft_cfg, spec_draft_params, lanes=decode_width,
                 max_len=self.kv.max_blocks_per_seq * block_size + spec.k + 1,
                 buckets=self.buckets, sync=sync,
-                dtype=fp_dtype)       # draft caches stay fp under kv_quant
+                dtype=fp_dtype,       # draft caches stay fp under kv_quant
+                tracer=self.tracer)
             vctx = (self.ctx.for_verify(spec.k, decode_width)
                     if self.ctx is not None else None)
             self._verify = jax.jit(partial(paged_fns["paged_verify"],
@@ -529,6 +549,25 @@ class PagedBatcher:
         self._mixed_step_fn = partial(paged_fns["mixed_step"],
                                       hetero_ctx=self.ctx)
         self._mixed = jax.jit(self._mixed_step_fn, donate_argnums=(3,))
+
+    def _dispatch_span(self, kind: str, track: str, specs=(), **args):
+        """Context manager for one traced dispatch: ``specs`` is a sequence
+        of ``dispatch_prediction`` kwarg dicts (a fused window is mixed
+        first step + plain decode rest, hence a sequence) whose decision
+        tags and predicted cost annotate the span and feed the drift
+        report. With the tracer disabled NOTHING here runs — no prediction
+        lookup, no event — preserving the zero-overhead contract."""
+        tr = self.tracer
+        if not tr.enabled:
+            return tr.dispatch(kind)
+        from repro.core.engine import dispatch_prediction
+        tags, total = [], 0.0
+        for sp in specs:
+            t, p = dispatch_prediction(self._plan, self.cfg, **sp)
+            tags.extend(t)
+            total += p
+        return tr.dispatch(kind, track=track, tags=tuple(tags),
+                           predicted_us=total, args=args)
 
     @property
     def total_dispatches(self) -> int:
@@ -638,10 +677,15 @@ class PagedBatcher:
             for c in bucket_chunks(len(req.prompt) - seq.cached_tokens,
                                    self.buckets):
                 piece = jnp.asarray(req.prompt[idx: idx + c], jnp.int32)
-                logits, self.kv.pool = self._prefill(
-                    self.params, piece[None], self.kv.pool, block_table=bt,
-                    start_index=jnp.asarray(idx, jnp.int32))
+                with self._dispatch_span("prefill_chunk", "prefill",
+                                         ({"m": c},), rid=req.rid,
+                                         chunk=c, start=idx):
+                    logits, self.kv.pool = self._prefill(
+                        self.params, piece[None], self.kv.pool,
+                        block_table=bt,
+                        start_index=jnp.asarray(idx, jnp.int32))
                 self.prefill_dispatches += 1
+                self.tracer.count("prefill_dispatches")
                 idx += c
             self.rng, k = jax.random.split(self.rng)
             lane = self._place(req, seq, int(sample(logits[:, -1, :], k,
@@ -726,6 +770,9 @@ class PagedBatcher:
             raise ValueError(f"preempt of finishing lane {lane}: it frees "
                              "itself on the next step")
         self.preemptions += 1
+        self.tracer.count("preemptions")
+        self.tracer.instant("lane_preempt", track="scheduler",
+                            args={"lane": lane, "rid": st.req.rid})
         if self.drafts is not None:
             self.drafts.rollback(lane, 0)   # stale draft cache: cursor home
         return self._close_lane(lane).req
@@ -746,6 +793,7 @@ class PagedBatcher:
         self.peak_active = max(
             self.peak_active,
             len(active) + (self._admitting is not None))
+        self.tracer.gauge("peak_active", self.peak_active)
         # zero-budget admissions (max_new_tokens == 1, or EOS sampled at
         # prefill) finish without a decode step
         for i in list(active):
@@ -766,10 +814,16 @@ class PagedBatcher:
             if not active:
                 # nothing decoding: the chunk pays its own dispatch
                 piece, bt, start = adm_chunk
-                pre_logits, self.kv.pool = self._prefill(
-                    self.params, piece, self.kv.pool, block_table=bt,
-                    start_index=jnp.asarray(start, jnp.int32))
+                c = int(piece.shape[1])
+                with self._dispatch_span("prefill_chunk", "prefill",
+                                         ({"m": c},),
+                                         rid=self._admitting.req.rid,
+                                         chunk=c, start=start):
+                    pre_logits, self.kv.pool = self._prefill(
+                        self.params, piece, self.kv.pool, block_table=bt,
+                        start_index=jnp.asarray(start, jnp.int32))
                 self.prefill_dispatches += 1
+                self.tracer.count("prefill_dispatches")
             elif self.sync == "device":
                 pre_logits = self._decode_window(active, adm_chunk)
             else:
@@ -812,12 +866,17 @@ class PagedBatcher:
             last[i, 0] = st.req.output[-1]
         drafts = self.drafts.draft(last, k)                    # [W, k]
         tokens = np.concatenate([last, drafts], axis=1)        # [W, k+1]
-        logits, self.kv.pool = self._verify(
-            self.params, jnp.asarray(tokens), self.kv.pool,
-            block_table=jnp.asarray(tables),
-            start_index=jnp.asarray(starts))
+        with self._dispatch_span("paged_verify", "verify",
+                                 ({"verify": (k, self.W)},),
+                                 k=k, lanes=len(active)):
+            logits, self.kv.pool = self._verify(
+                self.params, jnp.asarray(tokens), self.kv.pool,
+                block_table=jnp.asarray(tables),
+                start_index=jnp.asarray(starts))
         self.verify_dispatches += 1
         self.decode_dispatches += 1      # the round's one TARGET dispatch
+        self.tracer.count("verify_dispatches")
+        self.tracer.count("decode_dispatches")
         emitted, n_emit = self._accept(jnp.asarray(drafts), logits)
         emitted, n_emit = np.asarray(emitted), np.asarray(n_emit)
         for i in active:
@@ -828,15 +887,20 @@ class PagedBatcher:
             if hit_eos:
                 toks = toks[: toks.index(self.eos_id) + 1]
             self.spec_rounds += 1
+            self.tracer.count("spec_rounds")
             # acceptance rate counts only drafts whose verification row was
             # budget-covered (rows past the coverage score null-block
             # garbage) and only acceptances that actually emitted — neither
             # side of the ratio may include schedule-truncated drafts
             self.drafted_tokens += min(k, st.budget)
             self.accepted_tokens += min(int(n_emit[i]) - 1, len(toks))
+            self.tracer.count("drafted_tokens", min(k, st.budget))
+            self.tracer.count("accepted_tokens",
+                              min(int(n_emit[i]) - 1, len(toks)))
             st.req.output.extend(toks)
             st.budget -= len(toks)
             self.decode_steps += len(toks)
+            self.tracer.count("decode_steps", len(toks))
             new_len = st.seq.length + len(toks)
             self.kv.truncate_to(st.seq, new_len)    # paged rollback
             st.seq.length = new_len
@@ -861,20 +925,28 @@ class PagedBatcher:
             last[i, 0] = st.req.output[-1]
         pre_logits = None
         if adm_chunk is None:
-            logits, self.kv.pool = self._decode(
-                self.params, jnp.asarray(last), self.kv.pool,
-                block_tables=jnp.asarray(tables),
-                lengths=jnp.asarray(lengths))
+            with self._dispatch_span("decode_step", "decode",
+                                     ({"m": self.W},), active=len(active)):
+                logits, self.kv.pool = self._decode(
+                    self.params, jnp.asarray(last), self.kv.pool,
+                    block_tables=jnp.asarray(tables),
+                    lengths=jnp.asarray(lengths))
         else:
             piece, bt, start = adm_chunk
-            logits, pre_logits, self.kv.pool = self._mixed(
-                self.params, jnp.asarray(last), piece, self.kv.pool,
-                decode_tables=jnp.asarray(tables),
-                decode_lengths=jnp.asarray(lengths),
-                prefill_table=bt,
-                prefill_start=jnp.asarray(start, jnp.int32))
+            c = int(piece.shape[1])
+            with self._dispatch_span("mixed_step", "decode",
+                                     ({"mixed": (c, self.W)},),
+                                     active=len(active), chunk=c):
+                logits, pre_logits, self.kv.pool = self._mixed(
+                    self.params, jnp.asarray(last), piece, self.kv.pool,
+                    decode_tables=jnp.asarray(tables),
+                    decode_lengths=jnp.asarray(lengths),
+                    prefill_table=bt,
+                    prefill_start=jnp.asarray(start, jnp.int32))
             self.fused_steps += 1
+            self.tracer.count("fused_steps")
         self.decode_dispatches += 1
+        self.tracer.count("decode_dispatches")
         self.rng, k = jax.random.split(self.rng)
         toks = np.asarray(sample(logits[:, -1, :], k, self.sampler))
         for i in active:
@@ -884,6 +956,7 @@ class PagedBatcher:
             st.seq.length += 1
             st.budget -= 1
             self.decode_steps += 1
+            self.tracer.count("decode_steps")
             if st.budget <= 0 or (self.eos_id is not None
                                   and tok == self.eos_id):
                 self._finish(i)
@@ -902,6 +975,9 @@ class PagedBatcher:
         from repro.core.sync import paged_decode_window
 
         w = self.window
+        # core never imports serving: hand the window a live tracer only —
+        # the disabled path passes None and core skips span construction
+        win_tracer = self.tracer if self.tracer.enabled else None
         tables = np.zeros((self.W, self.kv.max_blocks_per_seq), np.int32)
         lengths = np.zeros((self.W,), np.int32)
         remaining = np.zeros((self.W,), np.int32)
@@ -919,24 +995,44 @@ class PagedBatcher:
         self.rng, sub = jax.random.split(self.rng)
         pre_logits = None
         if adm_chunk is None:
-            toks, valid, self.kv.pool, _, _ = paged_decode_window(
-                self.model, self.params, jnp.asarray(last), self.kv.pool,
-                jnp.asarray(tables), jnp.asarray(lengths),
-                jnp.asarray(remaining), sub, w,
-                sampler=self.sampler, eos_id=self.eos_id,
-                decode_step_fn=self._decode_step_fn)
+            # the compiled window always runs w full-width steps (finished
+            # lanes are masked, not skipped) — predict what executes
+            with self._dispatch_span("decode_window", "decode",
+                                     ({"m": self.W, "steps": w},),
+                                     window=w, active=len(active)):
+                toks, valid, self.kv.pool, _, _ = paged_decode_window(
+                    self.model, self.params, jnp.asarray(last), self.kv.pool,
+                    jnp.asarray(tables), jnp.asarray(lengths),
+                    jnp.asarray(remaining), sub, w,
+                    sampler=self.sampler, eos_id=self.eos_id,
+                    decode_step_fn=self._decode_step_fn,
+                    tracer=win_tracer)
         else:
             piece, bt, start = adm_chunk
-            toks, valid, pre_logits, self.kv.pool, _, _ = paged_decode_window(
-                self.model, self.params, jnp.asarray(last), self.kv.pool,
-                jnp.asarray(tables), jnp.asarray(lengths),
-                jnp.asarray(remaining), sub, w,
-                sampler=self.sampler, eos_id=self.eos_id,
-                prefill_tokens=piece, prefill_table=bt, prefill_start=start,
-                mixed_step_fn=self._mixed_step_fn,
-                decode_step_fn=self._decode_step_fn)
+            c = int(piece.shape[1])
+            # first scan step fuses the chunk (MIXED decision), the w-1
+            # remaining steps are plain full-width decode
+            specs = [{"mixed": (c, self.W)}]
+            if w > 1:
+                specs.append({"m": self.W, "steps": w - 1})
+            with self._dispatch_span("mixed_window", "decode", specs,
+                                     window=w, active=len(active), chunk=c):
+                toks, valid, pre_logits, self.kv.pool, _, _ = \
+                    paged_decode_window(
+                        self.model, self.params, jnp.asarray(last),
+                        self.kv.pool,
+                        jnp.asarray(tables), jnp.asarray(lengths),
+                        jnp.asarray(remaining), sub, w,
+                        sampler=self.sampler, eos_id=self.eos_id,
+                        prefill_tokens=piece, prefill_table=bt,
+                        prefill_start=start,
+                        mixed_step_fn=self._mixed_step_fn,
+                        decode_step_fn=self._decode_step_fn,
+                        tracer=win_tracer)
             self.fused_steps += 1
+            self.tracer.count("fused_steps")
         self.decode_dispatches += 1
+        self.tracer.count("decode_dispatches")
         toks = np.asarray(toks)
         valid = np.asarray(valid)
         for i in active:
@@ -946,6 +1042,7 @@ class PagedBatcher:
             st.seq.length += len(emitted)
             st.budget -= len(emitted)
             self.decode_steps += len(emitted)
+            self.tracer.count("decode_steps", len(emitted))
             hit_eos = (self.eos_id is not None
                        and self.eos_id in emitted)
             if st.budget <= 0 or hit_eos:

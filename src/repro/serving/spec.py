@@ -118,7 +118,10 @@ class DraftLanes:
     """
 
     def __init__(self, cfg, params, *, lanes: int, max_len: int,
-                 buckets=(64, 128, 256), sync: str = "host", dtype=None):
+                 buckets=(64, 128, 256), sync: str = "host", dtype=None,
+                 tracer=None):
+        from .trace import NULL_TRACER
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -145,10 +148,14 @@ class DraftLanes:
         idx = 0
         for c in bucket_chunks(len(prompt), self.buckets):
             piece = jnp.asarray(prompt[idx: idx + c], jnp.int32)
-            _, self.cache = self._prefill_piece(
-                self.params, self.cache, piece, jnp.asarray(lane),
-                jnp.asarray(idx, jnp.int32), chunk=c)
+            with self.tracer.dispatch("draft_prefill_chunk", track="draft",
+                                      args={"lane": lane, "chunk": c,
+                                            "start": idx}):
+                _, self.cache = self._prefill_piece(
+                    self.params, self.cache, piece, jnp.asarray(lane),
+                    jnp.asarray(idx, jnp.int32), chunk=c)
             self.dispatches += 1
+            self.tracer.count("draft_dispatches")
             idx += c
         self.idx[lane] = len(prompt)
 
@@ -160,21 +167,26 @@ class DraftLanes:
         Inactive lanes draft garbage that the caller discards."""
         cache = {**self.cache, "index": jnp.asarray(self.idx)}
         tok = jnp.asarray(last, jnp.int32)
-        if self.sync == "device":
-            from repro.core.sync import generate_on_device
-            toks, self.cache = generate_on_device(self.model, self.params,
-                                                  tok, cache, k + 1)
-            self.dispatches += 1
-        else:
-            outs = []
-            for _ in range(k + 1):
-                logits, cache = self._step(self.params, tok, cache)
-                tok = jnp.argmax(logits[:, -1, :], axis=-1
-                                 ).astype(jnp.int32)[:, None]
-                outs.append(tok[:, 0])
+        with self.tracer.dispatch("spec_draft", track="draft",
+                                  args={"k": k, "sync": self.sync,
+                                        "lanes": self.W}):
+            if self.sync == "device":
+                from repro.core.sync import generate_on_device
+                toks, self.cache = generate_on_device(self.model, self.params,
+                                                      tok, cache, k + 1)
                 self.dispatches += 1
-            self.cache = cache
-            toks = jnp.stack(outs, axis=1)
+                self.tracer.count("draft_dispatches")
+            else:
+                outs = []
+                for _ in range(k + 1):
+                    logits, cache = self._step(self.params, tok, cache)
+                    tok = jnp.argmax(logits[:, -1, :], axis=-1
+                                     ).astype(jnp.int32)[:, None]
+                    outs.append(tok[:, 0])
+                    self.dispatches += 1
+                    self.tracer.count("draft_dispatches")
+                self.cache = cache
+                toks = jnp.stack(outs, axis=1)
         self.idx = self.idx + np.int32(k + 1)
         return np.asarray(toks[:, :k])
 

@@ -66,15 +66,17 @@ def _workload(cfg, seed, n=5):
     return prompts, budgets, order
 
 
-def _arms(cfg, params, n, max_len):
+def _arms(cfg, params, n, max_len, **extra):
+    """The six scheduler arms; ``extra`` kwargs (e.g. ``tracer=``) are
+    forwarded to every constructor."""
     nb = 1 + n * -(-max_len // BS)
     paged = dict(num_blocks=nb, block_size=BS,
                  max_blocks_per_seq=-(-max_len // BS), decode_width=3,
-                 buckets=(32, 64), cache_dtype=jnp.float32)
+                 buckets=(32, 64), cache_dtype=jnp.float32, **extra)
     return {
         "dense": lambda: ContinuousBatcher(cfg, params, max_batch=3,
                                            max_len=max_len,
-                                           buckets=(32, 64)),
+                                           buckets=(32, 64), **extra),
         "paged_host": lambda: PagedBatcher(cfg, params, sync="host",
                                            **paged),
         "paged_device": lambda: PagedBatcher(cfg, params, sync="device",
@@ -180,6 +182,53 @@ def test_all_arms_token_identical_and_leak_free(smoke_model, seed):
                 assert 0.0 <= st["acceptance_rate"] <= 1.0
                 assert st["decode_steps"] >= st["spec_rounds"]
         assert not batcher.queue
+
+
+# ------------------------------------------------- trace cross-check arm --
+
+@pytest.mark.tier1
+def test_trace_counters_reconcile_on_every_arm(smoke_model):
+    """Observability cross-check: every arm replayed with a Tracer attached
+    must (a) stay token-identical (tracing is observation only), (b) emit
+    trace B-events whose per-kind counts equal the stats() dispatch
+    counters, and (c) reconcile the tracer's mirrored counters against
+    stats() exactly (counter_reconciliation == {})."""
+    from repro.serving.telemetry import FakeClock
+    from repro.serving.trace import Tracer, counter_reconciliation
+    cfg, model, params = smoke_model
+    prompts, budgets, order = _workload(cfg, seed=0)
+    max_len = max(LEN_PALETTE) + 8 + 1
+    refs = [_reference(model, params, p, m)
+            for p, m in zip(prompts, budgets)]
+
+    for name in _arms(cfg, params, len(prompts), max_len):
+        tracer = Tracer(FakeClock(),
+                        cost_model=lambda kind, pred: max(pred, 10.0) * 1e-6)
+        batcher = _arms(cfg, params, len(prompts), max_len,
+                        tracer=tracer)[name]()
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=budgets[i])
+                for i in order]
+        batcher.run(reqs)
+        for r in reqs:
+            assert r.output == refs[r.rid], (name, r.rid)
+
+        assert counter_reconciliation(tracer, batcher.stats()) == {}, name
+        by_kind = {}
+        for e in tracer.events:
+            if e["ph"] == "B" and e.get("cat") == "dispatch":
+                by_kind[e["name"]] = by_kind.get(e["name"], 0) + 1
+        st = batcher.stats()
+        assert by_kind.get("prefill_chunk", 0) == st["prefill_dispatches"], \
+            (name, by_kind)
+        decode_kinds = ("decode_step", "decode_window", "mixed_step",
+                        "mixed_window", "paged_verify")
+        assert sum(by_kind.get(k, 0) for k in decode_kinds) \
+            == st["decode_dispatches"], (name, by_kind)
+        assert sum(by_kind.get(k, 0) for k in ("mixed_step", "mixed_window")) \
+            == st["fused_steps"], (name, by_kind)
+        if st.get("verify_dispatches"):
+            assert by_kind["paged_verify"] == st["verify_dispatches"], name
+        assert tracer.dropped == 0 and tracer.n_events > 0
 
 
 # ------------------------------------------------- tensor-parallel arm ----
