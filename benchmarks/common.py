@@ -18,7 +18,8 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 
 # bump when the BENCH_*.json payload shape changes so trajectory tooling
 # can tell apart artifacts written by different repo generations
-SCHEMA_VERSION = 1
+# (2: added the ``repolint_clean`` lint-attestation field)
+SCHEMA_VERSION = 2
 
 
 @lru_cache(maxsize=1)
@@ -32,6 +33,19 @@ def git_sha() -> str:
         return "unknown"
     sha = out.stdout.strip()
     return sha if out.returncode == 0 and sha else "unknown"
+
+
+@lru_cache(maxsize=1)
+def repolint_clean() -> bool:
+    """Whether the tree the bench ran on passes repolint — stamped into
+    every BENCH_*.json so perf artifacts attest the code they measured
+    held the repo's static invariants (donation safety, determinism,
+    jit hygiene, sync discipline)."""
+    try:
+        from repro.analysis import run_repolint
+        return run_repolint(REPO_ROOT).ok
+    except Exception:
+        return False
 
 # rows emitted since the last emit_json() call: emit() records every CSV row
 # here so benches don't have to thread their results twice
@@ -74,7 +88,8 @@ def emit_json(name: str, metrics: dict | None = None) -> Path:
     path = REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(
         {"bench": name, "schema_version": SCHEMA_VERSION,
-         "git_sha": git_sha(), "metrics": metrics or {}, "rows": rows},
+         "git_sha": git_sha(), "repolint_clean": repolint_clean(),
+         "metrics": metrics or {}, "rows": rows},
         indent=1))
     _WRITTEN.append(path)
     return path

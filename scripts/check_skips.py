@@ -23,6 +23,7 @@ ALLOWED_SKIPS: dict[str, str] = {}
 
 # every tests/test_*.py module must show up in the tier-1 report
 EXPECTED_MODULES = (
+    "test_analysis",
     "test_attention", "test_core", "test_distributed", "test_fused_decode",
     "test_ingress", "test_kernel_conformance", "test_kernels",
     "test_mixed_batch", "test_models", "test_paged_cache",

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""repolint CLI — run the repo's AST invariant linter.
+
+Usage:
+    python scripts/repolint.py --check              # CI gate (exit 1 on new
+                                                    # or stale findings)
+    python scripts/repolint.py --list-rules
+    python scripts/repolint.py --update-baseline    # regenerate baseline
+
+Pure stdlib + the repro.analysis package (no jax import), so CI can run it
+on a bare python with no project dependencies installed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.core import (  # noqa: E402
+    BASELINE_NAME, Baseline, rule_registry, run_repolint)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on findings not covered by the "
+                         "baseline (and on stale baseline entries)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the current findings to the baseline file")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline path (default: <root>/{BASELINE_NAME})")
+    ap.add_argument("--root", type=Path, default=REPO,
+                    help="repo root to lint (default: this repo)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, (kind, fn) in sorted(rule_registry().items()):
+            doc = (fn.__doc__ or "").strip().splitlines()
+            print(f"{name:18} [{kind:7}] {doc[0] if doc else ''}")
+        return 0
+
+    root = args.root.resolve()
+    baseline_path = args.baseline or root / BASELINE_NAME
+    rules = tuple(r.strip() for r in args.rules.split(",")) \
+        if args.rules else None
+
+    report = run_repolint(root, rules=rules,
+                          baseline=Baseline.load(baseline_path))
+
+    if args.update_baseline:
+        Baseline.from_findings(report.findings).save(baseline_path)
+        print(f"[repolint] wrote {len(report.findings)} fingerprint(s) "
+              f"to {baseline_path}")
+        return 0
+
+    for f in report.new:
+        print(f.render())
+    for fp in report.stale:
+        print(f"stale baseline entry (no longer fires): {fp}")
+    print(report.summary())
+    if not report.ok:
+        print("[repolint] FAIL — fix the finding, or suppress with "
+              "'# repolint: disable=<rule> -- <reason>' on the flagged line")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""repolint — repo-custom static analysis over Python ASTs.
+
+The serving stack's core invariants (donated-buffer discipline, zero
+wall-clock outside the injectable Clock, host-sync-free hot loops,
+collision-free stats()/metrics schemas) were previously guarded by
+convention, ad-hoc CI greps, and runtime assertions that only fire when a
+test happens to exercise the bad path. This package proves them statically
+over every file, on every commit, before anything runs:
+
+  * :mod:`repro.analysis.core`   — findings, per-line pragmas, baseline,
+    file walker, and the :func:`run_repolint` driver.
+  * :mod:`repro.analysis.rules`  — the AST rules: ``use-after-donate``,
+    ``determinism``, ``jit-hygiene``, ``host-sync``.
+  * :mod:`repro.analysis.schema` — the project-level ``schema-contract``
+    rule cross-checking stats() keys, tracer counter names,
+    ``STATS_COUNTER_KEYS`` and docs/observability.md.
+
+Entry point: ``scripts/repolint.py`` (CI runs ``--check``); see
+docs/static-analysis.md for the rule catalog and pragma/baseline workflow.
+"""
+from .core import (Baseline, Finding, Report, RULE_NAMES, run_repolint,
+                   walk_tree)
+
+__all__ = ["Baseline", "Finding", "Report", "RULE_NAMES", "run_repolint",
+           "walk_tree"]

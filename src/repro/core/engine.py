@@ -19,7 +19,6 @@ Prefill strategies for dynamic lengths (paper §5.3.2 / Fig 14):
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Optional
@@ -32,7 +31,7 @@ from repro.models import build_model
 from .partition import HeteroCtx
 from .profiler import LatencyTable, STANDARD_BUCKETS, profile_analytic
 from .solver import PartitionSolver, PartitionPlan
-from .sync import generate_host_loop, generate_on_device
+from .sync import fence, generate_host_loop, generate_on_device
 
 
 def build_plan(cfg, *, sync_mode: str = "fast",
@@ -138,7 +137,14 @@ class InferenceEngine:
                  plan: Optional[PartitionPlan] = None,
                  buckets: tuple = STANDARD_BUCKETS,
                  max_len: int = 2048, interpret: bool = True,
-                 use_kernels: bool = True, rng=None):
+                 use_kernels: bool = True, rng=None, clock=None):
+        # EngineStats timing reads the injected clock (serving/telemetry
+        # Clock protocol) — MonotonicClock by default, FakeClock in tests
+        # keeps tier-1 free of wall-clock reads.
+        if clock is None:
+            from repro.serving.telemetry import MonotonicClock
+            clock = MonotonicClock()
+        self.clock = clock
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -216,7 +222,7 @@ class InferenceEngine:
             batch=B, max_len=total,
             dtype=jnp.dtype(self.cfg.compute_dtype))
 
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         chunks = self._bucket_chunks(S)
         idx = 0
         logits = None
@@ -225,19 +231,19 @@ class InferenceEngine:
             if take < c:                # pipe-mode padded tail
                 piece = jnp.pad(piece, ((0, 0), (0, c - take)))
             fn, new = self._jit_prefill(c)
-            tc = time.perf_counter()
+            tc = self.clock.now()
             logits, cache = fn(self.params, piece, cache, start_index=idx)
             if new:                     # first call pays trace+compile
-                jax.block_until_ready(logits)
-                self.stats.compile_s += time.perf_counter() - tc
+                fence(logits)
+                self.stats.compile_s += self.clock.now() - tc
             idx += take
         cache = {**cache, "index": jnp.asarray(S, jnp.int32)}
-        jax.block_until_ready(logits)
-        self.stats.prefill_s += time.perf_counter() - t0
+        fence(logits)
+        self.stats.prefill_s += self.clock.now() - t0
         self.stats.prefill_tokens += B * S
 
         first = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         n_more = max_new_tokens - 1
         if n_more > 0:
             gen = generate_on_device if self.fast_sync else generate_host_loop
@@ -245,8 +251,8 @@ class InferenceEngine:
             out = jnp.concatenate([first, toks], axis=1)
         else:
             out = first
-        jax.block_until_ready(out)
-        self.stats.decode_s += time.perf_counter() - t0
+        fence(out)
+        self.stats.decode_s += self.clock.now() - t0
         self.stats.decode_tokens += B * max_new_tokens
         return out
 

@@ -20,7 +20,6 @@ Usage:
 import argparse
 import json
 import sys
-import time
 import traceback
 from pathlib import Path
 
@@ -54,7 +53,7 @@ def _probe_shape(cfg, shape):
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              probe: int = 0, kv_mode: str = "auto", seq_shard: bool = True,
              serve_fsdp: bool = False, variant: str = "",
-             out_dir: str = "artifacts/dryrun") -> dict:
+             out_dir: str = "artifacts/dryrun", clock=None) -> dict:
     import jax
     from repro.configs import get_config, SHAPES, cell_is_supported
     from repro.distributed.sharding import activation_sharding
@@ -62,6 +61,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import make_step_and_specs
     from repro.roofline.hlo_parse import collective_summary
+    from repro.serving.telemetry import MonotonicClock
+
+    # lower_s/compile_s read the injected clock (telemetry Clock protocol);
+    # real wall time by default, FakeClock under test
+    clock = clock if clock is not None else MonotonicClock()
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -85,7 +89,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec["probe_seq_scale"] = probe_scale
     rec["n_layers_used"] = cfg.n_layers
 
-    t0 = time.time()
+    t0 = clock.now()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         with set_mesh(mesh):
@@ -94,9 +98,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 seq_shard=seq_shard, serve_fsdp=serve_fsdp)
             with activation_sharding(act_spec):
                 lowered = jf.lower(*args)
-            t1 = time.time()
+            t1 = clock.now()
             compiled = lowered.compile()
-            t2 = time.time()
+            t2 = clock.now()
         mem = compiled.memory_analysis()
         rec["memory"] = {
             k: int(getattr(mem, k)) for k in

@@ -14,10 +14,11 @@ Mechanisms (single-controller process here; the contracts mirror multi-host):
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from statistics import median
 from typing import Callable, Optional
+
+from repro.serving.telemetry import Clock, MonotonicClock
 
 
 @dataclass
@@ -50,24 +51,28 @@ def run_resilient(n_steps: int, *, state, data, step_fn: Callable,
                   monitor: Optional[StepMonitor] = None,
                   policy: Optional[RestartPolicy] = None,
                   fail_injector: Optional[Callable] = None,
-                  log: Callable = print):
+                  log: Callable = print,
+                  clock: Optional[Clock] = None):
     """Run the training loop with checkpoint/restart + straggler tracking.
 
     fail_injector(step) -> None | Exception — used by tests to simulate node
-    failures at specific steps.
+    failures at specific steps. ``clock`` feeds the straggler monitor's
+    per-step durations (telemetry Clock protocol; MonotonicClock by
+    default, FakeClock in tests so tier-1 never reads wall time).
     """
     monitor = monitor or StepMonitor()
     policy = policy or RestartPolicy()
+    clock = clock if clock is not None else MonotonicClock()
     step = int(state["step"])
     metrics = {}
     while step < n_steps:
         try:
-            t0 = time.perf_counter()
+            t0 = clock.now()
             if fail_injector is not None:
                 fail_injector(step)
             batch = data.next()
             state, metrics = step_fn(state, batch)
-            dt = time.perf_counter() - t0
+            dt = clock.now() - t0
             step += 1
             if monitor.record(step, dt):
                 log(f"[ft] straggler at step {step}: {dt:.3f}s")

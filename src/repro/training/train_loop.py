@@ -6,7 +6,6 @@ int8-EF gradient compression on the DP reduction.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Optional
@@ -21,6 +20,7 @@ from repro.models import build_model
 from repro.training import optimizer as opt
 from repro.training.checkpoint import CheckpointManager
 from repro.training.data import SyntheticLM
+from repro.serving.telemetry import Clock, MonotonicClock
 from repro.training.fault_tolerance import (RestartPolicy, StepMonitor,
                                             run_resilient)
 
@@ -60,7 +60,8 @@ def make_train_step(cfg, tcfg: TrainConfig, *, unroll: bool = False):
 
 
 def train(cfg, tcfg: TrainConfig, shape=None, *, data=None,
-          fail_injector=None, log=print):
+          fail_injector=None, log=print, clock: Optional[Clock] = None):
+    clock = clock if clock is not None else MonotonicClock()
     model, step_fn = make_train_step(cfg, tcfg)
     params = model.init(jax.random.PRNGKey(0))
     state = opt.init_state(params, tcfg.opt)
@@ -75,7 +76,7 @@ def train(cfg, tcfg: TrainConfig, shape=None, *, data=None,
     losses = []
 
     def logged_step(state, batch):
-        t0 = time.perf_counter()
+        t0 = clock.now()
         state, metrics = step_fn(state, batch)
         step = int(state["step"])
         if step % tcfg.log_every == 0 or step == 1:
@@ -83,11 +84,12 @@ def train(cfg, tcfg: TrainConfig, shape=None, *, data=None,
             losses.append((step, loss))
             log(f"step {step:5d} loss {loss:.4f} "
                 f"gnorm {float(metrics['grad_norm']):.3f} "
-                f"({time.perf_counter() - t0:.2f}s)")
+                f"({clock.now() - t0:.2f}s)")
         return state, metrics
 
     state, metrics, monitor = run_resilient(
         tcfg.steps, state=state, data=data, step_fn=logged_step,
         ckpt=ckpt, save_every=tcfg.save_every,
-        policy=RestartPolicy(), fail_injector=fail_injector, log=log)
+        policy=RestartPolicy(), fail_injector=fail_injector, log=log,
+        clock=clock)
     return state, losses, monitor

@@ -161,11 +161,11 @@ def test_split_kv_decode_matches_oracle():
     vn = jax.random.normal(ks[2], (B, 1, Hkv, D), jnp.float32)
     kc = jax.random.normal(ks[3], (B, Smax, Hkv, D), jnp.float32)
     vc = jax.random.normal(ks[4], (B, Smax, Hkv, D), jnp.float32)
+    jf = jax.jit(split_kv_decode_update_attend)   # hoisted: one trace cache
     for pos in (0, 15, 16, 37, 63):      # includes shard boundaries
         idx = jnp.asarray(pos, jnp.int32)
         with set_mesh(mesh):
-            out, ck, cv = jax.jit(split_kv_decode_update_attend)(
-                q, kn, vn, kc, vc, idx)
+            out, ck, cv = jf(q, kn, vn, kc, vc, idx)
         kc2 = kc.at[:, pos].set(kn[:, 0])
         vc2 = vc.at[:, pos].set(vn[:, 0])
         ref = decode_attention_ref(q[:, 0], kc2, vc2, pos + 1)

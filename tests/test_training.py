@@ -96,6 +96,45 @@ def test_straggler_monitor():
     assert len(m.events) == 1
 
 
+def test_train_clock_injectable(tmp_path):
+    """Regression for the Clock migration: train()'s step timing reads the
+    injected telemetry Clock (not time.perf_counter), so a FakeClock run
+    records exactly the virtual durations the clock hands out."""
+    from repro.serving.telemetry import FakeClock
+    from repro.training.fault_tolerance import run_resilient
+
+    class TickClock(FakeClock):
+        def now(self):            # each read advances 1 virtual second
+            t = super().now()
+            self.advance(1.0)
+            return t
+
+    cfg = get_smoke_config("smollm-135m")
+    tcfg = TrainConfig(steps=4, save_every=100, log_every=1,
+                       ckpt_dir=str(tmp_path))
+    lines = []
+    state, losses, monitor = train(cfg, tcfg, log=lines.append,
+                                   clock=TickClock())
+    assert int(state["step"]) == 4
+    # run_resilient's monitor saw clock-derived dts, never wall time
+    assert all(dt > 0.0 for dt in monitor.times)
+    assert all(float(dt) == int(float(dt)) for dt in monitor.times)
+
+    # and a plain FakeClock (frozen time) yields dt == 0.0 for every step:
+    # wall-clock-free by construction
+    mon2 = StepMonitor()
+    data = SyntheticLM(cfg.vocab_size, 16, 2, seed=0)
+    st = {"step": 0}
+
+    def step_fn(s, batch):
+        return {"step": s["step"] + 1}, {}
+
+    run_resilient(3, state=st, data=data, step_fn=step_fn,
+                  ckpt=CheckpointManager(tmp_path / "c2"), monitor=mon2,
+                  clock=FakeClock(), log=lambda *a: None)
+    assert mon2.times == [0.0, 0.0, 0.0]
+
+
 def test_synthetic_data_deterministic_and_restorable():
     d1 = SyntheticLM(1000, 32, 4, seed=3)
     batches = [d1.next() for _ in range(5)]
